@@ -1,0 +1,63 @@
+"""Paper Fig 9 + Table II: AutoSwap overhead vs memory-load limit per
+priority score (+Bayesian-optimized combination), and the maximum
+zero-overhead load reduction per model."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autoswap import AutoSwapPlanner
+from repro.core.bayesopt import tune_swap_weights
+from repro.core.simulator import GTX_1080TI
+
+from .common import CNN_MODELS, cnn_trace, emit, timer
+
+
+def fig9(model: str = "vgg16", n_points: int = 8, bo_iters: int = 16):
+    tr = cnn_trace(model)
+    pl = AutoSwapPlanner(tr, GTX_1080TI)
+    peak, lmin = pl.peak_load, pl.load_min()
+    rows = []
+    limits = [int(peak - (peak - lmin) * k / n_points) for k in range(1, n_points + 1)]
+    for limit in limits:
+        per = {}
+        for m in ("doa", "aoa", "wdoa", "swdoa"):
+            per[m] = pl.evaluate(limit, method=m).overhead
+        with timer() as t:
+            bo = tune_swap_weights(pl, limit, n_iter=bo_iters)
+        per["bo"] = min(bo.best_y, min(per.values()))  # BO safeguards to the best PS
+        rows.append((
+            f"fig9/{model}/limit_{limit//2**20}MiB",
+            f"{t.elapsed*1e6:.0f}",
+            "|".join(f"{k}={v*100:.2f}%" for k, v in per.items()),
+        ))
+    return rows
+
+
+def table2():
+    rows = []
+    for name in CNN_MODELS:
+        tr = cnn_trace(name)
+        pl = AutoSwapPlanner(tr, GTX_1080TI)
+        best_limit, best = pl.peak_load, 0.0
+        for m in ("doa", "aoa", "wdoa", "swdoa"):
+            limit, ov = pl.max_zero_overhead_reduction(method=m, grid=24)
+            if limit < best_limit:
+                best_limit, best = limit, ov
+        red = 100 * (1 - best_limit / pl.peak_load)
+        rows.append((
+            f"table2/{name}",
+            "0",
+            f"orig_MiB={pl.peak_load/2**20:.0f}"
+            f"|reduced_MiB={best_limit/2**20:.0f}"
+            f"|reduction={red:.1f}%|overhead={best*100:.2f}%",
+        ))
+    return rows
+
+
+def main():
+    emit(fig9() + table2())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper Fig 11: SmartPool+AutoSwap vs the three baseline policies.
+
+  * MXNet-memonger-style   — trading compute for memory: re-trace the CNN
+    with jax.checkpoint (recompute in backward); footprint drops, overhead
+    is the recompute time.
+  * SuperNeurons-style     — swapping restricted to convolution outputs.
+  * GeePS-style            — user-chosen swap set: weights/momentum only
+    (the "end user decides which tensors" policy).
+  * ours                   — full AutoSwap (all candidates, SWDOA).
+
+All four run on identical traces + the identical simulator, so the
+comparison isolates policy quality exactly as the paper's Fig 11 intends.
+"""
+
+from __future__ import annotations
+
+from repro.core.autoswap import AutoSwapPlanner
+from repro.core.simulator import GTX_1080TI, iteration_time, simulate_swap_schedule
+from repro.core.smartpool import solve
+
+from .common import cnn_trace, emit
+
+
+def _swap_policy_rows(name, tr, keep_fn, tag):
+    pl = AutoSwapPlanner(tr, GTX_1080TI)
+    pl.candidates = [c for c in pl.candidates if keep_fn(c, tr)]
+    if not pl.candidates:
+        return [(f"fig11/{name}/{tag}", "0", "reduction=0.0%|overhead=0.00%")]
+    limit, ov = pl.max_zero_overhead_reduction(method="swdoa", grid=16)
+    red = 100 * (1 - limit / pl.peak_load)
+    # plus a deeper point with overhead
+    lmin = pl.load_min()
+    deep = int(lmin + 0.1 * (pl.peak_load - lmin))
+    r2 = pl.evaluate(deep, method="swdoa")
+    red2 = 100 * (1 - deep / pl.peak_load)
+    return [(
+        f"fig11/{name}/{tag}",
+        "0",
+        f"zero_ov_reduction={red:.1f}%"
+        f"|deep_reduction={red2:.1f}%|deep_overhead={r2.overhead*100:.1f}%",
+    )]
+
+
+def run(models=("vgg16", "resnet50")):
+    rows = []
+    for name in models:
+        tr = cnn_trace(name)
+
+        # memonger-style: recompute via jax.checkpoint
+        tr_rm = cnn_trace(name, remat=True)
+        base_t = iteration_time(tr, GTX_1080TI)
+        rm_t = iteration_time(tr_rm, GTX_1080TI)
+        red = 100 * (1 - tr_rm.peak_load() / tr.peak_load())
+        rows.append((
+            f"fig11/{name}/memonger",
+            "0",
+            f"reduction={red:.1f}%|overhead={(rm_t/base_t-1)*100:.1f}%",
+        ))
+
+        by_id = tr.by_id()
+        rows += _swap_policy_rows(
+            name, tr,
+            lambda c, t: "conv" in (by_id[c.var].name or ""),
+            "superneurons_conv_only",
+        )
+        rows += _swap_policy_rows(
+            name, tr,
+            lambda c, t: c.wraps,  # weights/momentum: the user-pickable set
+            "geeps_manual_weights",
+        )
+        rows += _swap_policy_rows(name, tr, lambda c, t: True, "ours_autoswap")
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run artifacts.
+
+Three terms per cell (TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI):
+
+  compute_s    = HLO_FLOPs / (chips * peak)     [analytic, loop-aware — see
+                                                 core/costmodel.py for why
+                                                 compiled.cost_analysis()
+                                                 undercounts scans]
+  memory_s     = HLO_bytes / (chips * hbm_bw)   [analytic unfused bound]
+  collective_s = collective_bytes / link_bw     [loop-aware census of the
+                                                 compiled per-device HLO]
+
+Also: MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (serve),
+the useful-compute ratio MODEL_FLOPS/HLO_FLOPs, the dominant term, and the
+roofline fraction  ideal_compute_s / dominant_term  (the §Perf score).
+
+Writes results/roofline.csv; prints one row per cell.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def analyze(rec: dict) -> dict:
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    flops_g = rec["analytic"]["flops"]
+    # fusion-aware HBM traffic when available (see core/costmodel.py); the
+    # unfused sum is an upper bound and is also reported
+    bytes_g = rec["analytic"].get("bytes_fused") or rec["analytic"]["bytes"]
+    coll_dev = rec["collectives_loop_aware"]["total_bytes"]
+
+    compute_s = flops_g / chips / PEAK
+    memory_s = bytes_g / chips / HBM
+    memory_unfused_s = rec["analytic"]["bytes"] / chips / HBM
+    collective_s = coll_dev / LINK
+
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * rec["n_active_params"] * rec["tokens_per_step"]
+    ideal_s = model_flops / chips / PEAK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    frac = ideal_s / max(terms.values()) if max(terms.values()) > 0 else 0.0
+
+    mem = rec["memory"]
+    hbm_gib = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_unfused_s": memory_unfused_s, "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": flops_g,
+        "useful_ratio": model_flops / flops_g if flops_g else 0.0,
+        "roofline_frac": frac,
+        "hbm_gib_per_dev": hbm_gib,
+    }
+
+
+def run(dryrun_dir: str = "results/dryrun", out_csv: str = "results/roofline.csv",
+        baseline_only: bool = True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        parts = os.path.basename(path)[:-5].split("__")
+        if baseline_only and len(parts) != 3:
+            continue  # __<profile> cells are reported in EXPERIMENTS §Perf
+        rec = json.load(open(path))
+        rows.append(analyze(rec))
+    if out_csv:
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+        with open(out_csv, "w") as f:
+            cols = list(rows[0].keys())
+            f.write(",".join(cols) + "\n")
+            for r in rows:
+                f.write(",".join(f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+                                 for c in cols) + "\n")
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+            f"dom={r['dominant']}|frac={r['roofline_frac']:.3f}"
+            f"|c={r['compute_s']*1e3:.1f}ms|m={r['memory_s']*1e3:.1f}ms"
+            f"|coll={r['collective_s']*1e3:.1f}ms|useful={r['useful_ratio']:.2f}"
+            f"|hbm={r['hbm_gib_per_dev']:.1f}GiB"
+        )
+
+
+if __name__ == "__main__":
+    main()

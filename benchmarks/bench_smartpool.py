@@ -1,0 +1,44 @@
+"""Paper Table I: competitive ratio + time complexity of SmartPool vs
+CnMem-style pool vs cudaMalloc, on VGG/ResNet traces at batch 100."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.baseline_pools import CnMemPool, exact_allocator
+from repro.core.simulator import CUDA_MALLOC_COST_S, GTX_1080TI, POOL_LOOKUP_COST_S, iteration_time
+from repro.core.smartpool import solve
+
+from .common import CNN_MODELS, cnn_trace, emit
+
+
+def run(batch: int = 100):
+    rows = []
+    for name in CNN_MODELS:
+        tr = cnn_trace(name, batch)
+        t0 = time.time()
+        sp = solve(tr, "best_fit")
+        solve_us = (time.time() - t0) * 1e6
+        cn = CnMemPool().run(tr)
+        ex = exact_allocator(tr)
+
+        it_cuda = iteration_time(tr, GTX_1080TI, malloc_cost_s=CUDA_MALLOC_COST_S)
+        it_pool = iteration_time(tr, GTX_1080TI, malloc_cost_s=POOL_LOOKUP_COST_S)
+        rows.append((
+            f"table1/{name}",
+            f"{solve_us:.0f}",
+            f"peak_MiB={tr.peak_load()/2**20:.0f}"
+            f"|smartpool_ratio={sp.competitive_ratio:.4f}"
+            f"|cnmem_ratio={cn.footprint/sp.peak_load:.4f}"
+            f"|cuda_iter_ms={it_cuda*1e3:.1f}"
+            f"|pool_speedup={it_cuda/it_pool:.2f}x",
+        ))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Shared benchmark plumbing: CNN trace cache + CSV emission."""
+
+from __future__ import annotations
+
+import functools
+import sys
+import time
+
+import jax
+
+from repro.core.simulator import GTX_1080TI, assign_times
+from repro.core.trace import trace_step_fn
+from repro.models.cnn import CNN
+
+CNN_MODELS = ("resnet18", "resnet34", "resnet50", "resnet101",
+              "vgg11", "vgg13", "vgg16", "vgg19")
+
+
+@functools.lru_cache(maxsize=None)
+def cnn_trace(name: str, batch: int = 100, remat: bool = False):
+    """One-iteration trace of <name>'s SGD train step at CIFAR batch size."""
+    cnn = CNN(name)
+    params = jax.eval_shape(cnn.init, jax.random.PRNGKey(0))
+    x, y = cnn.trace_inputs(batch)
+
+    if remat:
+        def step(p, m, xx, yy):
+            g = jax.grad(lambda pp: cnn.loss_remat(pp, xx, yy))(p)
+            upd = lambda pp, mm, gg: (pp - 0.01 * (0.9 * mm + gg), 0.9 * mm + gg)
+            out = jax.tree.map(upd, p, m, g)
+            two = lambda t: isinstance(t, tuple) and len(t) == 2
+            return (jax.tree.map(lambda t: t[0], out, is_leaf=two),
+                    jax.tree.map(lambda t: t[1], out, is_leaf=two))
+    else:
+        def step(p, m, xx, yy):
+            return cnn.train_step(p, m, xx, yy)
+
+    tr = trace_step_fn(step, params, params, x, y)
+    assign_times(tr, GTX_1080TI)
+    return tr
+
+
+def emit(rows: list[tuple], header: str = "name,us_per_call,derived"):
+    print(header)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    sys.stdout.flush()
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0

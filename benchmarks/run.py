@@ -1,0 +1,58 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: every paper table/figure + the roofline analysis.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="shorter BO sweep (fig9)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_autoswap,
+        bench_baseline_policies,
+        bench_combined,
+        bench_planner_lm,
+        bench_roofline,
+        bench_smartpool,
+    )
+    from benchmarks.common import emit
+
+    suites = {
+        "smartpool": lambda: bench_smartpool.run(),
+        "autoswap_table2": lambda: bench_autoswap.table2(),
+        "autoswap_fig9": (lambda: bench_autoswap.fig9(bo_iters=4 if args.fast else 16)),
+        "combined_fig10": lambda: bench_combined.run(),
+        "baselines_fig11": lambda: bench_baseline_policies.run(),
+        "planner_lm": lambda: bench_planner_lm.run(),
+    }
+    rows: list[tuple] = []
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            rows += fn()
+            print(f"# {name}: {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # keep the run going; surface the failure
+            rows.append((f"{name}/ERROR", "0", repr(e)))
+    emit(rows)
+    if not args.only or args.only == "roofline":
+        try:
+            bench_roofline.main()
+        except (FileNotFoundError, IndexError):
+            print("# roofline: dry-run artifacts missing (run launch/dryrun.py --all)",
+                  file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

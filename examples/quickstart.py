@@ -1,0 +1,73 @@
+"""Quickstart: the paper's memory planner on a real training step, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. builds a small qwen3-family model,
+2. extracts the step's variable lifetimes (model-transparently, via jaxpr),
+3. runs SmartPool (offline DSA) and compares against the CnMem-style online
+   pool and the exact allocator — the paper's Table I quantities,
+4. runs AutoSwap to find the largest zero-overhead memory-load reduction —
+   the paper's Table II quantity,
+5. trains a few steps to show nothing about the model changed.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import LayerSpec
+from repro.core import TPU_V5E
+from repro.core.planner import MemoryPlanner
+from repro.models import build_model
+from repro.optim import adamw_init
+from repro.launch.steps import build_train_step
+
+
+def main():
+    cfg = get_smoke_config("qwen3-4b").reduced(
+        name="quickstart", num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+        head_dim=32, d_ff=1024, vocab_size=8192,
+        program=(((LayerSpec(attn="full", ffn="dense"),), 4),),
+    )
+    model = build_model(cfg)
+    B, S = 8, 256
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    pshapes = model.init_shapes()
+
+    def step(params, batch):
+        return model.loss(params, batch)[0]
+
+    print("== planning (model-transparent, from the jaxpr) ==")
+    planner = MemoryPlanner(step, pshapes, batch, hw=TPU_V5E)
+    rep = planner.report()
+    print(f" variables            : {rep.num_variables}")
+    print(f" peak load omega(G)   : {rep.peak_load/2**20:8.2f} MiB")
+    print(f" SmartPool chi(G)     : {rep.smartpool_footprint/2**20:8.2f} MiB "
+          f"(ratio {rep.smartpool_ratio:.4f})")
+    print(f" CnMem-style pool     : {rep.cnmem_footprint/2**20:8.2f} MiB "
+          f"(ratio {rep.cnmem_ratio:.4f})")
+
+    print("\n== AutoSwap: zero-overhead reduction per priority score ==")
+    for m in ("doa", "aoa", "wdoa", "swdoa"):
+        limit, ov = planner.swap.max_zero_overhead_reduction(method=m, grid=16)
+        red = 100 * (1 - limit / max(planner.swap.peak_load, 1))
+        print(f"  {m:6s}: load -> {limit/2**20:8.2f} MiB  (-{red:.1f}%), overhead {ov*100:.2f}%")
+
+    print("\n== training (unchanged numerics) ==")
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    train = jax.jit(build_train_step(model, cfg), donate_argnums=(0, 1))
+    from repro.data import SyntheticTokens
+
+    ds = SyntheticTokens(cfg.vocab_size, S, B)
+    for i in range(5):
+        b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        params, opt, metrics = train(params, opt, b, jnp.asarray(i, jnp.int32))
+        print(f"  step {i}  loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Batched serving across architecture families: prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Serves three different cache disciplines side by side on smoke-scale models:
+  * qwen3  — full KV cache (GQA),
+  * gemma3 — sliding-window ring caches (5 local : 1 global),
+  * mamba2 — constant recurrent state (the long_500k discipline).
+Prints per-family decode throughput and shows the generations are
+deterministic for identical prompts.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+
+def serve(arch: str, batch: int = 4, prompt_len: int = 24, gen: int = 12):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len), 0,
+                              cfg.vocab_size, jnp.int32)
+    max_seq = prompt_len + gen
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, max_seq=max_seq))(
+        params, {"tokens": toks}
+    )
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    out = [nxt]
+    t0 = time.time()
+    for i in range(gen - 1):
+        logits, cache = decode(params, cache, nxt, jnp.asarray(prompt_len + i, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(nxt)
+    dt = time.time() - t0
+    seq = jnp.concatenate(out, axis=1)
+    print(f"{arch:12s} {batch} seqs x {gen} tokens  "
+          f"{batch*(gen-1)/max(dt,1e-9):7.1f} tok/s   sample={seq[0,:8].tolist()}")
+    return seq
+
+
+def main():
+    for arch in ("qwen3-4b", "gemma3-4b", "mamba2-370m"):
+        a = serve(arch)
+        b = serve(arch)
+        assert (a == b).all(), "serving must be deterministic"
+    print("deterministic across repeats: OK")
+
+
+if __name__ == "__main__":
+    main()

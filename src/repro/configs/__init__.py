@@ -1,0 +1,44 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke_config(arch)``.
+
+All 10 assigned architectures are selectable by id (``--arch <id>``); the
+paper's own CNN benchmark families live in models/cnn.py and are addressed by
+name ("vgg16", "resnet50", ...) in the benchmarks.
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+from .base import SHAPES, LayerSpec, ModelConfig, ShapeSpec, uniform_program  # noqa: F401
+from .specs import cache_specs, input_specs, supports_shape  # noqa: F401
+
+ARCHS: dict[str, str] = {
+    "qwen3-4b": "qwen3_4b",
+    "gemma3-4b": "gemma3_4b",
+    "starcoder2-7b": "starcoder2_7b",
+    "gemma2-9b": "gemma2_9b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "mamba2-370m": "mamba2_370m",
+    "whisper-large-v3": "whisper_large_v3",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

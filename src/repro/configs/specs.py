@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns the kwargs for the step function the cell
+lowers (train_step / prefill_step / serve_step) — weak-type-correct,
+shardable, zero device allocation.  Modality frontends are stubs per the
+assignment: VLM cells get precomputed patch embeddings, audio cells get
+post-conv frame embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import SHAPES, ModelConfig, ShapeSpec
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def supports_shape(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k runs only for sub-quadratic (SSM/hybrid) archs; encoder-only
+    models would skip decode shapes (none assigned here)."""
+    sp = SHAPES[shape]
+    if sp.name == "long_500k":
+        return cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    sp: ShapeSpec = SHAPES[shape]
+    B, S = sp.global_batch, sp.seq_len
+    act = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if sp.kind in ("train", "prefill"):
+        batch: dict = {}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), act)
+            batch["tokens"] = _sds((B, S), i32)
+        elif cfg.frontend == "vision_stub":
+            npatch = cfg.num_patch_tokens
+            batch["tokens"] = _sds((B, S - npatch), i32)
+            batch["patch_embeds"] = _sds((B, npatch, cfg.d_model), act)
+            batch["positions"] = _sds((3, B, S), i32)
+        else:
+            batch["tokens"] = _sds((B, S), i32)
+        if sp.kind == "train":
+            batch["labels"] = _sds(batch["tokens"].shape, i32)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": _sds((B, 1), i32),
+        "pos": _sds((), i32),
+    }
+
+
+def cache_specs(model, cfg: ModelConfig, shape: str):
+    """Shape-only KV/state cache pytree for a decode cell."""
+    sp = SHAPES[shape]
+    return jax.eval_shape(lambda: model.init_cache(sp.global_batch, sp.seq_len))

@@ -1,0 +1,39 @@
+"""Core library: SmartPool + AutoSwap (Zhang et al., 2019) adapted to JAX/TPU.
+
+Public surface:
+  events      — Event/VariableInfo/IterationTrace, load curves, omega(G)
+  iteration   — repeated-subsequence iteration detection
+  trace       — RecordingDevice (paper §V) + jaxpr lifetime extraction
+  smartpool   — offline-DSA weighted-interval-coloring pool
+  baseline_pools — CnMem-style online pool + cudaMalloc-style exact allocator
+  autoswap    — candidates, DOA/AOA/WDOA/SWDOA priority scores, selection
+  simulator   — timing model + discrete-event swap-schedule simulator
+  bayesopt    — GP+EI tuner for the combined priority score
+  planner     — MemoryPlanner: plans for real jitted step functions
+  offload     — remat/pinned_host offload policies driven by AutoSwap
+"""
+
+from . import autoswap, baseline_pools, bayesopt, events, iteration, simulator, smartpool, trace  # noqa: F401
+from .autoswap import AutoSwapPlanner
+from .events import Event, EventKind, IterationTrace, build_trace
+from .simulator import GTX_1080TI, TPU_V5E, HardwareSpec, SwapDecision, simulate_swap_schedule
+from .smartpool import AllocationPlan, solve as smartpool_solve
+from .trace import RecordingDevice, trace_jaxpr, trace_step_fn
+
+__all__ = [
+    "AutoSwapPlanner",
+    "Event",
+    "EventKind",
+    "IterationTrace",
+    "build_trace",
+    "GTX_1080TI",
+    "TPU_V5E",
+    "HardwareSpec",
+    "SwapDecision",
+    "simulate_swap_schedule",
+    "AllocationPlan",
+    "smartpool_solve",
+    "RecordingDevice",
+    "trace_jaxpr",
+    "trace_step_fn",
+]

@@ -1,0 +1,266 @@
+"""AutoSwap: automatic variable swapping (paper §IV).
+
+Pipeline:
+  candidates (§IV-A)  ->  priority scores (§IV-B)  ->  selection (§IV-D)
+  ->  schedule + overhead (§IV-E, simulated in core/simulator.py)
+
+Candidates: size >= threshold (default 1 MB) and an access gap that spans the
+peak-load time.  Weights/optimizer state additionally contribute a *wrap*
+candidate (absence across the iteration boundary, paper §VI-B3).
+
+Priority scores per candidate (higher = swap first):
+  DOA    duration of absence: (t_next - t_prev) - transfer_out - transfer_in
+  AOA    DOA * size  (or DOA / size when DOA < 0, per the paper)
+  WDOA   integral of the original load curve over (t_prev, t_next)
+  SWDOA  WDOA recomputed submodularly against the progressively-updated curve
+  BO     a*AOA + b*DOA + c*WDOA + d*SWDOA on standardized scores, with the
+         weights tuned by core/bayesopt.py against simulated overhead
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Literal, Sequence
+
+import numpy as np
+
+from .events import IterationTrace, VariableInfo
+from .simulator import HardwareSpec, SimResult, SwapDecision, assign_times, simulate_swap_schedule
+
+ScoreName = Literal["doa", "aoa", "wdoa", "swdoa"]
+DEFAULT_SIZE_THRESHOLD = 1 << 20  # 1 MB (paper §IV-A)
+
+
+@dataclass
+class Candidate:
+    var: int
+    size: int
+    out_after: int          # op index: access completing before the gap
+    in_before: int          # op index: access needing the variable back
+    wraps: bool = False
+    scores: dict[str, float] = field(default_factory=dict)
+
+    def decision(self) -> SwapDecision:
+        return SwapDecision(self.var, self.size, self.out_after, self.in_before, self.wraps)
+
+
+class AutoSwapPlanner:
+    """Computes candidates, scores, selections and schedules for one trace."""
+
+    def __init__(
+        self,
+        trace: IterationTrace,
+        hw: HardwareSpec,
+        size_threshold: int = DEFAULT_SIZE_THRESHOLD,
+        include_wrap: bool = True,
+    ):
+        self.trace = trace
+        self.hw = hw
+        if trace.op_times is None:
+            assign_times(trace, hw)
+        self.times = np.asarray(trace.op_times)
+        self.load = np.asarray(trace.load_curve(), dtype=np.float64)
+        self.peak_load = int(self.load.max()) if self.load.size else 0
+        self.peak_time = int(self.load.argmax()) if self.load.size else 0
+        self.size_threshold = size_threshold
+        self.candidates = self._find_candidates(include_wrap)
+        self._score_all()
+
+    # ---------------------------------------------------------- candidates
+    def _find_candidates(self, include_wrap: bool) -> list[Candidate]:
+        """Candidate = (variable, canonical absence window).
+
+        The paper filters to gaps spanning *the* peak index (§IV-A).  That
+        works for CNNs (the peak sits on the broad end-of-forward shoulder)
+        but collapses for LM steps whose instantaneous peak is a narrow
+        CE-chunk spike: almost nothing crosses that single index.  We keep
+        each variable's LARGEST access gap as its canonical window and defer
+        peak-relevance to selection time (``_active``): a candidate is
+        usable at a given limit iff its absence overlaps the over-limit
+        region.  The paper's filter is the special case limit -> peak.
+        """
+        out: list[Candidate] = []
+        for v in self.trace.variables:
+            if v.size < self.size_threshold:
+                continue
+            gap = self._largest_gap(v)
+            if gap is not None:
+                # prefer the gap spanning the global peak when one exists
+                span = self._gap_spanning_peak(v)
+                a, b = span if span is not None else gap
+                out.append(Candidate(v.var, v.size, a, b))
+            if include_wrap and v.free_index >= self.trace.num_indices and v.accesses:
+                # Persists across iterations (weights/optimizer state/inputs):
+                # absence across the iteration boundary (paper §VI-B3).
+                out.append(
+                    Candidate(v.var, v.size, max(v.accesses), min(v.accesses), wraps=True)
+                )
+        return out
+
+    def _largest_gap(self, v: VariableInfo) -> tuple[int, int] | None:
+        acc = sorted(v.accesses)
+        best = None
+        for a, b in zip(acc, acc[1:]):
+            if b - a > 1 and (best is None or b - a > best[1] - best[0]):
+                best = (a, b)
+        return best
+
+    def _gap_spanning_peak(self, v: VariableInfo) -> tuple[int, int] | None:
+        """The consecutive-access pair (a, b) with a <= peak_time < b."""
+        acc = sorted(v.accesses)
+        for a, b in zip(acc, acc[1:]):
+            if a <= self.peak_time < b:
+                return (a, b)
+        return None
+
+    def _active(self, limit: int) -> list[Candidate]:
+        """Candidates whose absence overlaps the over-limit load region."""
+        over = self.load > limit
+        if not over.any():
+            return []
+        return [c for c in self.candidates if bool((self._absence_mask(c) & over).any())]
+
+    # ---------------------------------------------------------- scoring
+    def _interval_seconds(self, c: Candidate) -> float:
+        if not c.wraps:
+            return float(self.times[c.in_before] - self.times[c.out_after])
+        # Wrap: tail-of-iteration + head-of-next (same shape in steady state).
+        total = float(self.times[-1])
+        return (total - float(self.times[c.out_after])) + float(self.times[c.in_before])
+
+    def _load_area(self, load: np.ndarray, c: Candidate) -> float:
+        """Integral of `load` over the candidate's absence window (seconds*bytes)."""
+        dt = np.diff(self.times)
+        if not c.wraps:
+            sl = slice(c.out_after, c.in_before)
+            return float((load[sl] * dt[sl]).sum())
+        head = slice(0, c.in_before)
+        tail = slice(c.out_after, len(load))
+        return float((load[head] * dt[head]).sum() + (load[tail] * dt[tail]).sum())
+
+    def _absence_mask(self, c: Candidate) -> np.ndarray:
+        m = np.zeros(len(self.load), dtype=bool)
+        if not c.wraps:
+            m[c.out_after : c.in_before] = True
+        else:
+            m[: c.in_before] = True
+            m[c.out_after :] = True
+        return m
+
+    def _score_all(self) -> None:
+        transfer = lambda c: 2.0 * c.size / self.hw.link_bw  # out + in
+        for c in self.candidates:
+            doa = self._interval_seconds(c) - transfer(c)
+            aoa = doa * c.size if doa >= 0 else doa / c.size
+            wdoa = self._load_area(self.load, c)
+            c.scores.update(doa=doa, aoa=aoa, wdoa=wdoa)
+        # SWDOA: re-rank against the progressively-updated load curve (§IV-B iv).
+        work = self.load.copy()
+        remaining = list(self.candidates)
+        while remaining:
+            scored = [(self._load_area(work, c), c) for c in remaining]
+            best_score, best = max(scored, key=lambda s: s[0])
+            best.scores["swdoa"] = best_score
+            work = work - best.size * self._absence_mask(best)
+            remaining.remove(best)
+
+    def standardized(self) -> dict[str, np.ndarray]:
+        """Z-scored score vectors aligned with ``self.candidates`` (paper §IV-C)."""
+        out = {}
+        for k in ("doa", "aoa", "wdoa", "swdoa"):
+            x = np.array([c.scores[k] for c in self.candidates], dtype=np.float64)
+            std = x.std()
+            out[k] = (x - x.mean()) / std if std > 0 else np.zeros_like(x)
+        return out
+
+    # ---------------------------------------------------------- selection
+    def ranked(
+        self,
+        method: ScoreName | None = None,
+        weights: Sequence[float] | None = None,
+    ) -> list[Candidate]:
+        if weights is not None:
+            z = self.standardized()
+            combo = (
+                weights[0] * z["aoa"] + weights[1] * z["doa"]
+                + weights[2] * z["wdoa"] + weights[3] * z["swdoa"]
+            )
+            order = np.argsort(-combo, kind="stable")
+            return [self.candidates[i] for i in order]
+        assert method is not None
+        return sorted(self.candidates, key=lambda c: -c.scores[method])
+
+    def select(
+        self,
+        limit: int,
+        method: ScoreName | None = "swdoa",
+        weights: Sequence[float] | None = None,
+    ) -> list[SwapDecision]:
+        """Greedy selection until the synchronously-updated peak <= limit (§IV-D)."""
+        active_set = {(c.var, c.wraps) for c in self._active(limit)}
+        work = self.load.copy()
+        chosen: list[SwapDecision] = []
+        seen: set[int] = set()
+        for c in self.ranked(method, weights):
+            if work.max() <= limit:
+                break
+            if (c.var, c.wraps) not in active_set:
+                continue
+            if c.var in seen:
+                continue  # one absence window per variable
+            seen.add(c.var)
+            work = work - c.size * self._absence_mask(c)
+            chosen.append(c.decision())
+        return chosen
+
+    def updated_load(self, decisions: Sequence[SwapDecision]) -> np.ndarray:
+        work = self.load.copy()
+        for d in decisions:
+            c = Candidate(d.var, d.size, d.out_after, d.in_before, d.wraps)
+            work = work - d.size * self._absence_mask(c)
+        return work
+
+    def load_min(self) -> int:
+        """Peak load with *all* candidates absent (paper §VI-B1 load_min)."""
+        work = self.load.copy()
+        seen: set[int] = set()
+        for c in self.candidates:
+            if c.var in seen:
+                continue
+            seen.add(c.var)
+            work = work - c.size * self._absence_mask(c)
+        return int(work.max()) if work.size else 0
+
+    # ---------------------------------------------------------- evaluation
+    def evaluate(
+        self,
+        limit: int,
+        method: ScoreName | None = "swdoa",
+        weights: Sequence[float] | None = None,
+    ) -> SimResult:
+        decisions = self.select(limit, method, weights)
+        return simulate_swap_schedule(self.trace, decisions, self.hw, limit)
+
+    def max_zero_overhead_reduction(
+        self,
+        method: ScoreName | None = "swdoa",
+        weights: Sequence[float] | None = None,
+        tol: float = 0.005,
+        grid: int = 32,
+    ) -> tuple[int, float]:
+        """Lowest achievable load with ~zero overhead (paper Table II).
+
+        Scans a limit grid from peak down to load_min (overhead is not
+        monotone in the limit — paper Fig 9 — so no bisection)."""
+        lo, hi = self.load_min(), self.peak_load
+        if hi <= lo:
+            return hi, 0.0
+        best_limit, best_ov = hi, 0.0
+        for k in range(1, grid + 1):
+            limit = int(hi - (hi - lo) * k / grid)
+            r = self.evaluate(limit, method, weights)
+            if r.overhead <= tol:
+                best_limit, best_ov = limit, r.overhead
+            elif r.overhead > 5 * tol and k > grid // 2:
+                break
+        return best_limit, best_ov

@@ -1,0 +1,290 @@
+"""Loop-aware cost accounting for roofline analysis.
+
+``compiled.cost_analysis()`` counts a while/scan body ONCE regardless of trip
+count, which undercounts a 36-layer scanned transformer by ~36x.  Two
+correct sources instead:
+
+1. ``jaxpr_flops_bytes(closed_jaxpr)`` — analytic traversal of the jaxpr with
+   exact dot_general/conv math, scan bodies multiplied by their static trip
+   count.  FLOPs are exact for matmul-dominated models; bytes are the
+   *unfused* upper bound (every eqn's operands+results), which brackets HBM
+   traffic from above.  These are GLOBAL (whole-program) numbers — divide by
+   chip count for per-device roofline terms under balanced sharding.
+
+2. ``loop_aware_collectives(hlo_text)`` — the per-device collective byte
+   census of launch/dryrun.py, but with while-body computations scaled by
+   their trip counts (parsed from the loop-condition constant), so
+   collectives inserted inside scanned layers are counted once per layer.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+import numpy as np
+
+from jax import core as _jcore_internal
+from jax.extend import core as _jex_core
+
+Literal = _jex_core.Literal
+ClosedJaxpr = _jex_core.ClosedJaxpr
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(math.prod(aval.shape)) * np.dtype(aval.dtype).itemsize
+    except Exception:
+        return 0
+
+
+def _nelems(aval) -> float:
+    try:
+        return float(math.prod(aval.shape))
+    except Exception:
+        return 0.0
+
+
+def _eqn_flops(eqn) -> float:
+    name = eqn.primitive.name
+    out_elems = sum(_nelems(o.aval) for o in eqn.outvars)
+    if name == "dot_general":
+        (contract, _), _ = eqn.params["dimension_numbers"], None
+        lhs_c = eqn.params["dimension_numbers"][0][0]
+        lhs = eqn.invars[0].aval.shape
+        k = 1.0
+        for d in lhs_c:
+            k *= lhs[d]
+        return 2.0 * out_elems * k
+    if name == "conv_general_dilated":
+        rhs = eqn.invars[1].aval.shape
+        dn = eqn.params["dimension_numbers"]
+        # kernel spatial dims * input-feature dim per output element
+        rhs_spec = dn.rhs_spec  # (out_c, in_c, *spatial) indices into rhs
+        k = rhs[rhs_spec[1]]
+        for d in rhs_spec[2:]:
+            k *= rhs[d]
+        return 2.0 * out_elems * k
+    if name in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                "argmax", "argmin", "reduce_and", "reduce_or"):
+        return sum(_nelems(i.aval) for i in eqn.invars if not isinstance(i, Literal))
+    if name in ("exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                "sin", "cos", "pow", "cbrt", "log1p", "expm1"):
+        return 4.0 * out_elems  # transcendental weight
+    if name in ("sort",):
+        n = max((_nelems(i.aval) for i in eqn.invars if not isinstance(i, Literal)), default=0.0)
+        return n * max(1.0, math.log2(max(n, 2.0)))
+    if name in ("gather", "scatter", "scatter-add", "scatter_add", "dynamic_slice",
+                "dynamic_update_slice", "broadcast_in_dim", "reshape", "transpose",
+                "convert_element_type", "slice", "concatenate", "pad", "iota",
+                "copy", "squeeze", "rev"):
+        return 0.0  # data movement only
+    return out_elems  # elementwise default
+
+
+def _eqn_bytes(eqn) -> float:
+    b = sum(_nbytes(o.aval) for o in eqn.outvars)
+    b += sum(_nbytes(i.aval) for i in eqn.invars if not isinstance(i, Literal))
+    return float(b)
+
+
+# Ops that force HBM round-trips on TPU (MXU feeds, data movement with
+# materialization).  Elementwise/norm arithmetic fuses into its producers and
+# is NOT charged — this gives the fusion-aware traffic estimate used for the
+# roofline memory term (the unfused sum is kept as an upper bound).
+_HEAVY = {
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "scatter_add", "dynamic_update_slice", "dynamic_slice", "sort",
+    "transpose", "rev", "concatenate", "cumsum", "cumlogsumexp",
+}
+
+
+def _eqn_bytes_fused(eqn) -> float:
+    if eqn.primitive.name not in _HEAVY:
+        return 0.0
+    return _eqn_bytes(eqn)
+
+
+_CALL_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+def _walk(jaxpr, mult: float, acc: dict) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "shard_map":
+            # body shapes are per-shard: scale by the number of shards so the
+            # accumulated totals stay whole-program (global)
+            mesh = eqn.params.get("mesh")
+            shards = 1.0
+            try:
+                for v in dict(mesh.shape).values():
+                    shards *= v
+            except Exception:
+                pass
+            sub = eqn.params.get("jaxpr")
+            if sub is not None:
+                _walk(sub if not hasattr(sub, "jaxpr") else sub.jaxpr, mult * shards, acc)
+                continue
+        if name == "scan":
+            body = eqn.params["jaxpr"]
+            trips = float(eqn.params["length"])
+            _walk(body.jaxpr, mult * trips, acc)
+            continue
+        if name == "while":
+            body = eqn.params["body_jaxpr"]
+            # trip count is dynamic; decode loops in this codebase are scans,
+            # so a conservative 1x is recorded plus a flag.
+            acc["dynamic_loops"] += 1
+            _walk(body.jaxpr, mult, acc)
+            continue
+        if name == "cond":
+            branches = eqn.params["branches"]
+            if branches:
+                _walk(branches[0].jaxpr, mult, acc)
+            continue
+        sub = None
+        for k in _CALL_KEYS:
+            if k in eqn.params:
+                sub = eqn.params[k]
+                break
+        if sub is not None and hasattr(sub, "jaxpr"):
+            _walk(sub.jaxpr, mult, acc)
+            continue
+        if sub is not None and hasattr(sub, "eqns"):
+            _walk(sub, mult, acc)
+            continue
+        acc["flops"] += mult * _eqn_flops(eqn)
+        acc["bytes"] += mult * _eqn_bytes(eqn)
+        acc["bytes_fused"] += mult * _eqn_bytes_fused(eqn)
+
+
+def jaxpr_flops_bytes(closed: ClosedJaxpr) -> dict:
+    """Global analytic {flops, bytes, bytes_fused} with scan trip counts."""
+    acc = defaultdict(float)
+    _walk(closed.jaxpr, 1.0, acc)
+    return {"flops": acc["flops"], "bytes": acc["bytes"],
+            "bytes_fused": acc["bytes_fused"],
+            "dynamic_loops": int(acc["dynamic_loops"])}
+
+
+# ----------------------------------------------------------- HLO loop-aware
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _shape_bytes(expr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(expr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its lines (ENTRY included under its own name)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and (s.startswith("%") or s.startswith("ENTRY")) and "=" not in s.split("(")[0]:
+            tok = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+            cur = tok.lstrip("%")
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if s == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def loop_aware_collectives(hlo: str) -> dict:
+    """Per-device collective bytes with while-body trip multiplication."""
+    comps = _split_computations(hlo)
+
+    # direct census per computation
+    census: dict[str, dict[str, dict]] = {}
+    for name, lines in comps.items():
+        c = {op: {"count": 0, "bytes": 0} for op in _COLLECTIVES}
+        for line in lines:
+            if "=" not in line:
+                continue
+            _, _, rest = line.partition("=")
+            rest = rest.strip()
+            for op in _COLLECTIVES:
+                m = re.search(rf"^(.*?)\s{op}(-start)?\(", rest)
+                if m:
+                    c[op]["count"] += 1
+                    c[op]["bytes"] += _shape_bytes(m.group(1))
+                    break
+        census[name] = c
+
+    # while ops: body/condition computation names + trip count from condition
+    calls: dict[str, list[tuple[str, float]]] = defaultdict(list)  # caller -> (callee, mult)
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                trips = 1.0
+                if mc and mc.group(1) in comps:
+                    consts = [
+                        int(x)
+                        for l in comps[mc.group(1)]
+                        for x in re.findall(r"constant\((\d+)\)", l)
+                    ]
+                    if consts:
+                        trips = float(max(consts))
+                if mb:
+                    calls[name].append((mb.group(1), trips))
+            else:
+                for mm in re.finditer(r"(?:calls|to_apply|body)=%?([\w\.\-]+)", line):
+                    callee = mm.group(1)
+                    if callee in comps:
+                        calls[name].append((callee, 1.0))
+
+    def total_of(name: str, seen: frozenset) -> dict[str, dict]:
+        if name in seen:
+            return {op: {"count": 0, "bytes": 0} for op in _COLLECTIVES}
+        out = {op: dict(census[name][op]) for op in _COLLECTIVES}
+        for callee, mult in calls.get(name, ()):  # recurse with multiplier
+            sub = total_of(callee, seen | {name})
+            for op in _COLLECTIVES:
+                out[op]["count"] += int(sub[op]["count"] * mult)
+                out[op]["bytes"] += int(sub[op]["bytes"] * mult)
+        return out
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY %?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: flat census over everything
+        flat = {op: {"count": 0, "bytes": 0} for op in _COLLECTIVES}
+        for c in census.values():
+            for op in _COLLECTIVES:
+                flat[op]["count"] += c[op]["count"]
+                flat[op]["bytes"] += c[op]["bytes"]
+        flat["total_bytes"] = sum(v["bytes"] for v in flat.values() if isinstance(v, dict))
+        return flat
+
+    out = total_of(entry, frozenset())
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    return out

@@ -1,0 +1,51 @@
+"""AutoSwap -> XLA host offload: the TPU-native swap execution path.
+
+The paper swaps tensors over PCIe from a runtime allocator.  Under XLA the
+equivalent mechanism is the ``pinned_host`` memory space: a remat policy
+(``save_and_offload_only_these_names``) tells XLA which named activations to
+DMA to host after the forward pass and stream back during backward — the
+same "swap out after last forward access, prefetch before backward access"
+schedule the paper builds by hand, executed by the compiler's async copy
+machinery (our two cudaStreams analog).
+
+AutoSwap chooses WHICH names: the jaxpr trace aggregates per-name byte
+volume + access gaps; names whose variables the planner selects (given the
+HBM budget) become the offload set.  Model code exposes three stable names
+per scanned block: ``block_in``, ``attn_out``, ``ffn_out``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+
+# Activation classes the models label with jax.ad_checkpoint.checkpoint_name.
+KNOWN_NAMES = ("block_in", "attn_out", "ffn_out")
+
+
+@dataclass
+class OffloadPlan:
+    offload_names: list[str] = field(default_factory=list)
+    save_names: list[str] = field(default_factory=list)
+    # planner-predicted per-device HBM relief (bytes) and transfer volume
+    predicted_savings: int = 0
+    transfer_bytes: int = 0
+
+    def policy(self):
+        """A jax.checkpoint policy executing this plan (offload via pinned_host)."""
+        if not self.offload_names and not self.save_names:
+            return None  # plain full remat
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=list(self.save_names),
+            names_which_can_be_offloaded=list(self.offload_names),
+            offload_src="device",
+            offload_dst="pinned_host",
+        )
+
+
+def remat_policy_for(names: list[str]) -> OffloadPlan:
+    unknown = [n for n in names if n not in KNOWN_NAMES]
+    if unknown:
+        raise ValueError(f"unlabelled activation classes {unknown}; known: {KNOWN_NAMES}")
+    return OffloadPlan(offload_names=list(names))

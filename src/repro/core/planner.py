@@ -1,0 +1,140 @@
+"""MemoryPlanner: the paper's pipeline applied to real jitted step functions.
+
+    step_fn --jaxpr--> IterationTrace --SmartPool--> allocation plan
+                                     \\--AutoSwap--> swap schedule
+                                                 \\--> OffloadPlan (remat names)
+
+This is the model-transparent entry point: it needs only the step function
+and example shapes (exactly like the paper's Device needs only the event
+stream).  Outputs:
+
+  * ``report()``     — peak load omega(G), SmartPool chi(G) + competitive
+                       ratio vs the CnMem-style online pool and the exact
+                       allocator (paper Table I quantities);
+  * ``swap_report(limit)`` — AutoSwap selection + simulated overhead at an
+                       HBM budget (paper Fig 9 / Table II quantities);
+  * ``offload_plan(limit)`` — the name-level offload set whose application
+                       via core/offload.py realizes the plan under XLA.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .autoswap import AutoSwapPlanner, ScoreName
+from .baseline_pools import CnMemPool, exact_allocator
+from .events import IterationTrace
+from .offload import KNOWN_NAMES, OffloadPlan
+from .simulator import TPU_V5E, HardwareSpec, assign_times
+from .smartpool import AllocationPlan, solve as smartpool_solve
+from .trace import trace_step_fn
+
+
+@dataclass
+class PoolReport:
+    peak_load: int
+    smartpool_footprint: int
+    smartpool_ratio: float
+    cnmem_footprint: int
+    cnmem_ratio: float
+    exact_footprint: int
+    num_variables: int
+
+    def as_dict(self) -> dict:
+        return self.__dict__.copy()
+
+
+@dataclass
+class SwapReport:
+    limit: int
+    peak_load: int
+    load_min: int
+    selected_bytes: int
+    num_selected: int
+    overhead: float
+    stalls: int
+    per_name_bytes: dict[str, int] = field(default_factory=dict)
+
+
+class MemoryPlanner:
+    def __init__(
+        self,
+        step_fn: Callable,
+        *example_args,
+        hw: HardwareSpec = TPU_V5E,
+        max_scan_unroll: int = 16,
+        size_threshold: int = 1 << 20,
+    ):
+        self.hw = hw
+        self.trace: IterationTrace = trace_step_fn(
+            step_fn, *example_args, max_scan_unroll=max_scan_unroll
+        )
+        assign_times(self.trace, hw)
+        self.swap = AutoSwapPlanner(self.trace, hw, size_threshold=size_threshold)
+
+    # ------------------------------------------------------------- pooling
+    def report(self, method: str = "best_fit") -> PoolReport:
+        plan: AllocationPlan = smartpool_solve(self.trace, method)
+        cn = CnMemPool().run(self.trace)
+        ex = exact_allocator(self.trace)
+        return PoolReport(
+            peak_load=plan.peak_load,
+            smartpool_footprint=plan.footprint,
+            smartpool_ratio=plan.competitive_ratio,
+            cnmem_footprint=cn.footprint,
+            cnmem_ratio=cn.footprint / plan.peak_load if plan.peak_load else 1.0,
+            exact_footprint=ex.footprint,
+            num_variables=len([v for v in self.trace.variables if v.size > 0]),
+        )
+
+    # ------------------------------------------------------------ swapping
+    def swap_report(
+        self, limit: int, method: ScoreName | None = "swdoa", weights=None
+    ) -> SwapReport:
+        decisions = self.swap.select(limit, method, weights)
+        sim = self.swap.evaluate(limit, method, weights)
+        by_id = self.trace.by_id()
+        per_name: dict[str, int] = {}
+        for d in decisions:
+            name = by_id[d.var].name or "?"
+            per_name[name] = per_name.get(name, 0) + d.size
+        return SwapReport(
+            limit=limit,
+            peak_load=self.swap.peak_load,
+            load_min=self.swap.load_min(),
+            selected_bytes=sum(d.size for d in decisions),
+            num_selected=len(decisions),
+            overhead=sim.overhead,
+            stalls=sim.stalls,
+            per_name_bytes=per_name,
+        )
+
+    # ------------------------------------------------------------- offload
+    def offload_plan(
+        self, limit: int, method: ScoreName | None = "swdoa", weights=None
+    ) -> OffloadPlan:
+        """Coarsen the per-variable selection to checkpoint_name classes.
+
+        A name class is offloaded when the planner selected a majority of its
+        candidate bytes — the scan-uniformity coarsening documented in
+        DESIGN.md §2.
+        """
+        decisions = self.swap.select(limit, method, weights)
+        by_id = self.trace.by_id()
+        selected: dict[str, int] = {}
+        total: dict[str, int] = {}
+        for c in self.swap.candidates:
+            name = by_id[c.var].name or ""
+            if name in KNOWN_NAMES:
+                total[name] = total.get(name, 0) + c.size
+        chosen_vars = {d.var for d in decisions}
+        for c in self.swap.candidates:
+            name = by_id[c.var].name or ""
+            if name in KNOWN_NAMES and c.var in chosen_vars:
+                selected[name] = selected.get(name, 0) + c.size
+        names = [n for n, b in selected.items() if b >= 0.5 * total.get(n, 1)]
+        plan = OffloadPlan(offload_names=sorted(names))
+        plan.predicted_savings = sum(selected.values())
+        plan.transfer_bytes = 2 * plan.predicted_savings
+        return plan

@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels with shape guards.
+
+Each op validates divisibility constraints, picks block sizes, and falls
+back to the ref.py oracle when the kernel's tiling preconditions don't hold
+(e.g. whisper's 1500-frame encoder, tiny smoke shapes) — callers never have
+to care.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm as _rmsnorm_kernel_op
+from .ssd_scan import ssd_scan
+
+
+def _pick_block(s: int, prefer=(512, 256, 128)) -> int | None:
+    for b in prefer:
+        if s % b == 0:
+            return b
+    return None
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale"))
+def flash_mha(q, k, v, *, causal=True, window=None, softcap=None, scale=None):
+    """Blockwise attention; kernel when tiles fit, oracle otherwise."""
+    Sq, Sk, hd = q.shape[1], k.shape[1], q.shape[-1]
+    bq, bk = _pick_block(Sq), _pick_block(Sk)
+    if bq is None or bk is None or hd % 64 or hd > 256:
+        return ref.mha_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=bq, block_k=bk,
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A, Bm, Cm, *, chunk=64):
+    if x.shape[1] % chunk:
+        return ref.ssd_reference(x, dt, A, Bm, Cm)
+    return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def fused_rmsnorm(x, scale, *, eps=1e-6):
+    return _rmsnorm_kernel_op(x, scale, eps=eps)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal=True, window=None, softcap=None, scale=None):
+    """q [B,Sq,H,hd], k/v [B,Sk,KV,hd] -> [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else hd**-0.5
+    kh = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vh = jnp.repeat(v, G, axis=2) if G > 1 else v
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), kh.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", w, vh.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (the definitionally-correct oracle).
+
+    x [b,s,h,p]; dt [b,s,h] (>0, post-softplus); A [h] (<0);
+    Bm/Cm [b,s,g,n].  Returns y [b,s,h,p].
+
+      state_t = state_{t-1} * exp(dt_t A) + dt_t * B_t x_t^T
+      y_t     = C_t . state_t
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2)  # [b,s,h,n]
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # [b,h,p], [b,h], [b,h,n], [b,h,n]
+        dA = jnp.exp(dtt * A)  # [b,h]
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        Bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+        Ch.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def rmsnorm_reference(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)

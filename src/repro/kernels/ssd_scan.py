@@ -1,0 +1,108 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid is (batch*heads, chunks) with the chunk axis "arbitrary": the running
+[P, N] SSM state lives in VMEM scratch and is carried across chunk steps,
+while each step does the intra-chunk quadratic work on the MXU:
+
+    cum   = cumsum(dA)                       [c]
+    y     = (C B^T  *  exp(cum_i - cum_j) tril) @ (x*dt)   intra-chunk
+          + exp(cum) * (C @ state^T)                        inter-chunk
+    state = state * exp(cum[-1]) + (x*dt)^T @ (B * exp(cum[-1]-cum))
+
+The wrapper pre-computes dA = dt*A[h] and xdt = x*dt so the kernel streams
+only [c,P]/[c,N]/[c] tiles; groups are broadcast to heads via the B/C index
+map (no duplication in VMEM).  Oracle: ref.ssd_reference (sequential
+recurrence).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_attention import _tpu_params, _vmem
+
+
+def _ssd_kernel(xdt_ref, dA_ref, b_ref, c_ref, y_ref, state_scr, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0].astype(jnp.float32)       # [c, P]
+    dA = dA_ref[0].astype(jnp.float32)         # [c] (as [c, 1] lane layout)
+    bm = b_ref[0].astype(jnp.float32)          # [c, N]
+    cm = c_ref[0].astype(jnp.float32)          # [c, N]
+
+    cum = jnp.cumsum(dA)                       # [c]
+    diff = cum[:, None] - cum[None, :]         # [c, c]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    CB = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [c, c]
+    y = jax.lax.dot_general(CB * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [c, P]
+
+    state = state_scr[...]                     # [P, N]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # [c, N] @ [N, P]^T -> [c, P]
+
+    decay_to_end = jnp.exp(cum[-1] - cum)      # [c]
+    new_state = state * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xdt, bm * decay_to_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # [P, N]
+    state_scr[...] = new_state
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool | None = None):
+    """x [b,s,h,p], dt [b,s,h] (post-softplus), A [h] (<0), Bm/Cm [b,s,g,n].
+
+    Returns y [b,s,h,p].  s % chunk == 0 required (ops.py guards)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dA = (dt * A).transpose(0, 2, 1).reshape(b * h, s)
+    bm = Bm.transpose(0, 2, 1, 3).reshape(b * g, s, n)
+    cm = Cm.transpose(0, 2, 1, 3).reshape(b * g, s, n)
+
+    grid = (b * h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: ((i // rep) if rep > 1 else i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: ((i // rep) if rep > 1 else i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+        scratch_shapes=[_vmem((p, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=_tpu_params_2d(),
+    )(xdt, dA, bm, cm)
+    return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+
+
+def _tpu_params_2d():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+    except Exception:  # pragma: no cover
+        return None

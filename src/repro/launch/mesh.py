@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Single pod:  (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:   (pod=2, data=16, model=16) = 512 chips; "pod" is an outer
+             data-parallel axis crossed once per step by the gradient
+             all-reduce (DCN-friendly ordering: pod axis is major).
+
+Functions, not module constants — importing this module never touches jax
+device state.  The dry-run process force-hosts 512 devices (XLA_FLAGS set as
+the first statement of launch/dryrun.py); the single-pod mesh then uses the
+first 256 of them.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "run under launch/dryrun.py (it force-hosts 512)."
+        )
+    arr = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary test mesh over the first prod(shape) devices."""
+    need = int(np.prod(shape))
+    arr = np.asarray(jax.devices()[:need]).reshape(shape)
+    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,239 @@
+"""Step builders + parameter/cache sharding specs for every architecture.
+
+Sharding policy (GSPMD, logical rules in distributed/sharding.py):
+  * attention heads / FFN hidden / vocab / experts  -> "model"
+  * batch -> ("pod", "data"); gradient reduction crosses pods once per step
+  * optional FSDP: the non-"model" weight dim additionally over "data"
+    (required for llama4-400b: 12 bytes/param of param+moments do not fit
+    16 GB/chip at model-parallel-16 alone)
+  * every rule degrades to replication when the dim is not divisible by the
+    mesh axis (e.g. hymba's 50 SSM heads on model=16)
+
+Steps return/accept pytrees whose shardings are attached to the
+ShapeDtypeStructs, so ``jax.jit(fn).lower(*specs)`` carries the full
+distribution contract — this is what the multi-pod dry-run compiles.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import batch_axes
+from repro.optim import adamw_init, adamw_step
+
+# FSDP is on for archs whose param+optimizer bytes exceed single-chip HBM at
+# TP-16 (see DESIGN.md §4).
+FSDP_ARCHS = {"llama4-maverick-400b-a17b", "deepseek-v2-lite-16b"}
+
+
+# --------------------------------------------------------------- divisibility
+def _ax(mesh: Mesh, name: str | tuple | None, dim: int):
+    """Mesh axis (or axes) for one tensor dim, with divisibility guard."""
+    if name is None:
+        return None
+    names = name if isinstance(name, tuple) else (name,)
+    names = tuple(n for n in names if n in mesh.axis_names)
+    if not names:
+        return None
+    size = int(np.prod([mesh.shape[n] for n in names]))
+    if dim % size != 0:
+        # try a prefix that divides
+        for k in range(len(names), 0, -1):
+            sub = names[:k]
+            if dim % int(np.prod([mesh.shape[n] for n in sub])) == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def _spec(mesh: Mesh, dims: list, shape: tuple[int, ...]) -> P:
+    """dims: logical mesh-axis names per tensor dim (right-aligned if stacked)."""
+    pad = len(shape) - len(dims)
+    dims = [None] * pad + list(dims)
+    return P(*[_ax(mesh, d, s) for d, s in zip(dims, shape)])
+
+
+# ------------------------------------------------------------- param specs
+def param_specs(cfg: ModelConfig, param_shapes, mesh: Mesh, fsdp: bool | None = None):
+    """PartitionSpec pytree matching the param pytree (stacked dims handled
+    by right-alignment: a leading scan-repeat dim is always replicated)."""
+    if fsdp is None:
+        fsdp = cfg.name in FSDP_ARCHS
+    dp = "data"
+
+    def rule(path_keys: list[str], shape: tuple[int, ...]) -> P:
+        name = path_keys[-1]
+        parent = path_keys[-2] if len(path_keys) > 1 else ""
+        if name in ("tok", "head"):                       # [V, D]
+            return _spec(mesh, ["model", dp if fsdp else None], shape)
+        if name == "wq":                                  # [D, H, hd] (attn + mla)
+            return _spec(mesh, [dp if fsdp else None, "model", None], shape)
+        if name in ("wk", "wv"):                          # [D, KV, hd]
+            return _spec(mesh, [dp if fsdp else None, "model", None], shape)
+        if name == "wo":                                  # [H, hd, D]
+            return _spec(mesh, ["model", None, dp if fsdp else None], shape)
+        if name in ("w_uk", "w_uv"):                      # [lora, H, *]
+            return _spec(mesh, [None, "model", None], shape)
+        if name == "w_dkv":                               # [D, lora]
+            return _spec(mesh, [dp if fsdp else None, None], shape)
+        if name == "w_kr":                                # [D, rope]
+            return _spec(mesh, [dp if fsdp else None, None], shape)
+        if name == "router":                              # [D, E]
+            return _spec(mesh, [None, "model"], shape)
+        if name in ("w_gate", "w_up"):
+            if parent == "moe":                           # experts [E, D, F]
+                return _spec(mesh, ["model", None, dp if fsdp else None], shape)
+            return _spec(mesh, [dp if fsdp else None, "model"], shape)
+        if name == "w_down":
+            if parent == "moe":                           # [E, F, D]
+                return _spec(mesh, ["model", dp if fsdp else None, None], shape)
+            return _spec(mesh, ["model", dp if fsdp else None], shape)
+        if name == "b_up":
+            return _spec(mesh, ["model"], shape)
+        if name == "in_proj":                             # [D, 2di+2gn+H]
+            return _spec(mesh, [dp if fsdp else None, "model"], shape)
+        if name in ("conv_w",):                           # [K, conv_dim]
+            return _spec(mesh, [None, "model"], shape)
+        if name in ("conv_b",):
+            return _spec(mesh, ["model"], shape)
+        if name == "out_proj":                            # [di, D]
+            return _spec(mesh, ["model", dp if fsdp else None], shape)
+        if name == "norm" and parent == "mamba":          # [di]
+            return _spec(mesh, ["model"], shape)
+        # norms, A_log, D, dt_bias, qk norms, branch norms, biases: replicate
+        return P(*([None] * len(shape)))
+
+    def build(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        return rule(keys, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(build, param_shapes)
+
+
+def cache_specs_tree(cfg: ModelConfig, cache_shapes, mesh: Mesh):
+    """Specs for decode caches (right-aligned; stacked layer dim replicated)."""
+
+    def rule(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        shape = leaf.shape
+        b = batch_axes(mesh)
+        if name in ("k", "v") or keys[-2] == "enc_kv":    # [B, S, KV, hd]
+            spec = _spec(mesh, [b, None, "model", None], shape)
+            if spec[2] is None:
+                # KV heads don't divide the model axis (e.g. 8 on 16):
+                # split-KV — shard the sequence dim of the cache instead,
+                # decode softmax handles it (flash-decoding layout).
+                spec = _spec(mesh, [b, "model", None, None], shape)
+            return spec
+        if name in ("c_kv", "k_rope"):                    # [B, S, lora]
+            return _spec(mesh, [b, "model", None], shape)
+        if name == "state":                               # [B, H, P, N]
+            return _spec(mesh, [b, "model", None, None], shape)
+        if name == "conv":                                # [B, K-1, conv_dim]
+            return _spec(mesh, [b, None, "model"], shape)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def batch_specs(cfg: ModelConfig, batch_shapes, mesh: Mesh):
+    b = batch_axes(mesh)
+
+    def rule(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        if name == "positions":                           # [3, B, S]
+            return _spec(mesh, [None, b, None], leaf.shape)
+        if name in ("tokens", "labels"):                  # [B, S]
+            return _spec(mesh, [b, None], leaf.shape)
+        if name in ("patch_embeds", "frames"):            # [B, S, D]
+            return _spec(mesh, [b, None, None], leaf.shape)
+        return _spec(mesh, [b] + [None] * (len(leaf.shape) - 1), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def with_sharding(mesh: Mesh, shapes, specs):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        shapes,
+        specs,
+    )
+
+
+# ------------------------------------------------------------ step builders
+def build_train_step(model, cfg: ModelConfig, *, lr: float = 3e-4,
+                     remat: bool = True, remat_policy=None,
+                     accum_steps: int = 1):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    accum_steps > 1 microbatches the global batch over a lax.scan (gradient
+    accumulation — the memory-term hillclimb lever)."""
+
+    def loss_fn(p, batch):
+        loss, metrics = model.loss(p, batch, remat=remat, remat_policy=remat_policy)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch, step):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                    b,
+                )
+
+            mb = micro(batch)
+
+            def body(acc, mbatch):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mbatch)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), m
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(body, (zero, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        params, opt_state, om = adamw_step(params, grads, opt_state, lr)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(model, cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def build_serve_step(model, cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+def init_optimizer_shapes(param_shapes):
+    return jax.eval_shape(adamw_init, param_shapes)
+
+
+def opt_specs_like(param_spec_tree):
+    """AdamWState specs: m/v follow params, count replicated."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(m=param_spec_tree, v=param_spec_tree, count=P())

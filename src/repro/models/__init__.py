@@ -1,0 +1,17 @@
+"""Model zoo: one builder for every assigned architecture family."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+from .cnn import CNN  # noqa: F401
+from .encdec import EncDecModel
+from .transformer import Model
+
+
+def build_model(cfg: ModelConfig):
+    """Returns the family-appropriate model object (shared API:
+    init/loss/prefill/decode_step/init_cache)."""
+    if cfg.is_encoder_decoder:
+        return EncDecModel(cfg)
+    return Model(cfg)

@@ -1,0 +1,279 @@
+"""Attention family: GQA full/sliding-window, softcap, qk-norm; KV caches.
+
+Three execution paths share exact semantics:
+  * dense   — materialized scores; small sequences (training at 4k).
+  * chunked — lax.scan over query blocks with online masking; bounds live
+              memory to O(q_block * S) and, for window layers, slices K/V to
+              the reachable window only (true FLOP reduction, not just mask).
+  * decode  — single-token step against a full or ring KV cache.
+
+Keys are cached post-RoPE.  Ring caches (window layers) store absolute slot
+positions implicitly: slot j at decode position p was written at
+q = p - ((p - j) mod W), valid iff q >= 0.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.sharding import shard_pick
+from .layers import rmsnorm
+from .rope import apply_rope
+
+# Sequences at or above this length use the chunked path in train/prefill.
+CHUNKED_THRESHOLD = 8192
+Q_BLOCK = 1024
+
+
+# ------------------------------------------------------------------- init
+def init_attention(key, cfg: ModelConfig, spec: LayerSpec):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H, hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, KV, hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, KV, hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (H, hd, d), jnp.float32) / np.sqrt(H * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_cross_attention(key, cfg: ModelConfig):
+    return init_attention(key, cfg, LayerSpec())
+
+
+# ---------------------------------------------------------------- scoring
+def _scale(cfg: ModelConfig) -> float:
+    return cfg.attn_scale if cfg.attn_scale is not None else 1.0 / np.sqrt(cfg.head_dim)
+
+
+def _softcap(scores, cap):
+    if cap:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _expand_kv(k, G: int):
+    """[B,S,KV,hd] -> [B,S,KV*G,hd] broadcast (fused into the matmul by XLA)."""
+    if G == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, G, hd)).reshape(B, S, KV * G, hd)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q [B,Sq,H,hd], k/v [B,Sk,KV,hd], mask broadcastable to [B,H,Sq,Sk].
+
+    Scores are [B, H, Sq, Sk] over *fused* q-heads so the partitioner can
+    shard them on H; when H doesn't divide the model axis (llama4: 40 heads,
+    hymba: 25), shard_pick falls back to query-seq then key-seq sharding
+    (context-parallel / split-KV) — otherwise scores replicate at
+    O(S^2 * H) per device.
+    """
+    B, Sq, H, hd = q.shape
+    G = H // k.shape[2]
+    k, v = _expand_kv(k, G), _expand_kv(v, G)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k) * _scale(cfg)
+    scores = _softcap(scores.astype(jnp.float32), cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    scores = shard_pick(
+        scores,
+        ("batch", "heads", None, None),
+        ("batch_full", None, None, None),
+        ("batch", None, "seq_model", None),
+        ("batch", None, None, "seq_model"),
+    )
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    return out
+
+
+def _causal_window_mask(q_pos, k_pos, causal: bool, window: int | None):
+    """[Sq, Sk] boolean mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def mha_dense(q, k, v, cfg: ModelConfig, *, causal=True, window=None):
+    Sq, Sk = q.shape[1], k.shape[1]
+    mask = _causal_window_mask(jnp.arange(Sq), jnp.arange(Sk), causal, window)
+    return _sdpa(q, k, v, mask[None, None], cfg)
+
+
+def mha_chunked(q, k, v, cfg: ModelConfig, *, causal=True, window=None, q_block=Q_BLOCK):
+    """Scan over query blocks; window layers slice K/V to the reachable range."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    nq = S // q_block
+    assert nq * q_block == S, (S, q_block)
+    qb = q.reshape(B, nq, q_block, H, hd).transpose(1, 0, 2, 3, 4)  # [nq,B,qb,H,hd]
+
+    if window is not None and causal:
+        # K/V reachable from q block i: [i*qb - (W-1), i*qb + qb)
+        span = q_block + _round_up(window, 128)
+
+        def block(carry, inp):
+            i, qi = inp
+            start = jnp.maximum(i * q_block + q_block - span, 0)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            q_pos = i * q_block + jnp.arange(q_block)
+            k_pos = start + jnp.arange(span)
+            mask = _causal_window_mask(q_pos, k_pos, causal, window)
+            return carry, _sdpa(qi, ks, vs, mask[None, None], cfg)
+
+        _, out = jax.lax.scan(block, None, (jnp.arange(nq), qb))
+    else:
+
+        def block(carry, inp):
+            i, qi = inp
+            q_pos = i * q_block + jnp.arange(q_block)
+            k_pos = jnp.arange(k.shape[1])
+            mask = _causal_window_mask(q_pos, k_pos, causal, window)
+            return carry, _sdpa(qi, k, v, mask[None, None], cfg)
+
+        _, out = jax.lax.scan(block, None, (jnp.arange(nq), qb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+# ----------------------------------------------------------- train/prefill
+def apply_attention(
+    p,
+    x,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    angles,
+    *,
+    causal: bool = True,
+    impl: str | None = None,
+):
+    """Full-sequence attention (training / prefill). Returns [B,S,D]."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    window = spec.window if spec.attn in ("window", "hybrid") else None
+    use_chunked = impl == "chunked" or (impl is None and S >= CHUNKED_THRESHOLD)
+    fn = mha_chunked if use_chunked else mha_dense
+    out = fn(q, k, v, cfg, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def apply_cross_attention(p, x, enc_kv, cfg: ModelConfig):
+    """Decoder cross-attention; enc_kv = (k, v) precomputed from the encoder."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k, v = enc_kv
+    out = _sdpa(q, k, v, None, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def encode_cross_kv(p, enc_out, cfg: ModelConfig):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+# ------------------------------------------------------------------ cache
+def cache_len(cfg: ModelConfig, spec: LayerSpec, max_seq: int) -> int:
+    if spec.attn in ("window", "hybrid") and spec.window is not None:
+        return min(max_seq, spec.window)
+    return max_seq
+
+
+def prefill_attention(p, x, cfg: ModelConfig, spec: LayerSpec, angles, max_seq: int):
+    """Full-sequence attention that also emits the filled KV cache."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    window = spec.window if spec.attn in ("window", "hybrid") else None
+    fn = mha_chunked if S >= CHUNKED_THRESHOLD else mha_dense
+    out = fn(q, k, v, cfg, causal=True, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+    W = cache_len(cfg, spec, max_seq)
+    if W >= S:
+        pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+        cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    else:
+        # Ring: slots hold the last W positions p in [S-W, S), slot = p % W.
+        pos = S - W + jnp.arange(W)
+        slots = pos % W
+        cache = {
+            "k": jnp.zeros((B, W) + k.shape[2:], dt).at[:, slots].set(k[:, pos]),
+            "v": jnp.zeros((B, W) + v.shape[2:], dt).at[:, slots].set(v[:, pos]),
+        }
+    return out, cache
+
+
+def init_kv_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int, dtype):
+    """Zeroed cache for one layer. Window layers get a ring of size window."""
+    size = max_seq
+    if spec.attn in ("window", "hybrid") and spec.window is not None:
+        size = min(max_seq, spec.window)
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p, x, cache, pos, cfg: ModelConfig, spec: LayerSpec, angles):
+    """One-token decode. x [B,1,D]; pos scalar int32; returns (out, new_cache)."""
+    dt = x.dtype
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+
+    # Unified ring-buffer update: full caches are rings of size max_seq, so
+    # slot == pos and the validity mask reduces to idx <= pos; window caches
+    # wrap and the mask keeps exactly the last `window` positions.
+    W = cache["k"].shape[1]
+    slot = pos % W
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    idx = jnp.arange(W)
+    written_at = pos - jnp.mod(pos - idx, W)  # last write position of slot idx
+    mask = written_at >= 0
+    out = _sdpa(q, new_k, new_v, mask[None, None, None, :], cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, {"k": new_k, "v": new_v}

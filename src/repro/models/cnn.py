@@ -1,0 +1,241 @@
+"""VGG and ResNet on CIFAR-10 — the paper's own benchmark networks (§VI).
+
+These exist to reproduce the paper's tables: their jaxpr traces (via
+core/trace.py) are the offline-DSA / AutoSwap problem instances for Table I,
+Table II and Figs 9-11.  Implemented with lax.conv so they also *run* (the
+allocator benchmarks never execute them; the smoke tests do, at tiny batch).
+
+Depth configs follow the torch blogs the paper cites: VGG-style convs with
+BN-free plain conv+relu (paper's SINGA lacks BN fusions anyway), ResNet
+basic/bottleneck blocks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VGG_PLANS = {
+    "vgg11": [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+    "vgg13": [64, 64, "M", 128, 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+    "vgg16": [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"],
+    "vgg19": [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+              512, 512, 512, 512, "M", 512, 512, 512, 512, "M"],
+}
+
+# (block, layers per stage, bottleneck?)
+RESNET_PLANS = {
+    "resnet18": ([2, 2, 2, 2], False),
+    "resnet34": ([3, 4, 6, 3], False),
+    "resnet50": ([3, 4, 6, 3], True),
+    "resnet101": ([3, 4, 23, 3], True),
+}
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+# ----------------------------------------------------------------- VGG
+def init_vgg(key, name: str, num_classes: int = 10):
+    plan = VGG_PLANS[name]
+    params = []
+    cin = 3
+    for i, item in enumerate(plan):
+        if item == "M":
+            params.append(None)
+            continue
+        k = jax.random.fold_in(key, i)
+        w = jax.random.normal(k, (3, 3, cin, item), jnp.float32) * np.sqrt(2.0 / (9 * cin))
+        params.append({"w": w, "b": jnp.zeros((item,), jnp.float32)})
+        cin = item
+    kf = jax.random.fold_in(key, 10_000)
+    params.append({
+        "w": jax.random.normal(kf, (cin, num_classes), jnp.float32) * 0.01,
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    })
+    return {"layers": params}
+
+
+def apply_vgg(params, x, name: str):
+    plan = VGG_PLANS[name]
+    for item, p in zip(plan, params["layers"]):
+        if item == "M":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        else:
+            x = jax.nn.relu(_conv(x, p["w"]) + p["b"])
+    x = x.mean(axis=(1, 2))
+    head = params["layers"][-1]
+    return x @ head["w"] + head["b"]
+
+
+# --------------------------------------------------------------- ResNet
+def _init_block(key, cin, cout, stride, bottleneck):
+    ks = jax.random.split(key, 4)
+
+    def w(k, kh, kw, ci, co):
+        return jax.random.normal(k, (kh, kw, ci, co), jnp.float32) * np.sqrt(
+            2.0 / (kh * kw * ci)
+        )
+
+    p = {}
+    if bottleneck:
+        mid = cout // 4
+        p["c1"] = w(ks[0], 1, 1, cin, mid)
+        p["c2"] = w(ks[1], 3, 3, mid, mid)
+        p["c3"] = w(ks[2], 1, 1, mid, cout)
+    else:
+        p["c1"] = w(ks[0], 3, 3, cin, cout)
+        p["c2"] = w(ks[1], 3, 3, cout, cout)
+    if stride != 1 or cin != cout:
+        p["proj"] = w(ks[3], 1, 1, cin, cout)
+    return p
+
+
+def _apply_block(p, x, stride, bottleneck):
+    identity = x
+    if bottleneck:
+        h = jax.nn.relu(_conv(x, p["c1"]))
+        h = jax.nn.relu(_conv(h, p["c2"], stride))
+        h = _conv(h, p["c3"])
+    else:
+        h = jax.nn.relu(_conv(x, p["c1"], stride))
+        h = _conv(h, p["c2"])
+    if "proj" in p:
+        identity = _conv(x, p["proj"], stride)
+    return jax.nn.relu(h + identity)
+
+
+def init_resnet(key, name: str, num_classes: int = 10):
+    stages, bottleneck = RESNET_PLANS[name]
+    widths = [64, 128, 256, 512]
+    if bottleneck:
+        widths = [w * 4 for w in widths]
+    params = {"stem": jax.random.normal(key, (3, 3, 3, 64), jnp.float32) * np.sqrt(2.0 / 27)}
+    cin = 64
+    blocks = []
+    for si, (n, cout) in enumerate(zip(stages, widths)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            k = jax.random.fold_in(key, si * 100 + bi)
+            blocks.append(_init_block(k, cin, cout, stride, bottleneck))
+            cin = cout
+    params["blocks"] = blocks
+    kf = jax.random.fold_in(key, 99_999)
+    params["head"] = {
+        "w": jax.random.normal(kf, (cin, num_classes), jnp.float32) * 0.01,
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+    return params
+
+
+def apply_resnet(params, x, name: str):
+    stages, bottleneck = RESNET_PLANS[name]
+    x = jax.nn.relu(_conv(x, params["stem"]))
+    i = 0
+    for si, n in enumerate(stages):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = _apply_block(params["blocks"][i], x, stride, bottleneck)
+            i += 1
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ------------------------------------------------------------ train step
+@dataclass
+class CNN:
+    name: str
+
+    def init(self, key):
+        if self.name.startswith("vgg"):
+            return init_vgg(key, self.name)
+        return init_resnet(key, self.name)
+
+    def apply(self, params, x):
+        if self.name.startswith("vgg"):
+            return apply_vgg(params, x, self.name)
+        return apply_resnet(params, x, self.name)
+
+    def loss(self, params, x, y):
+        logits = self.apply(params, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    def loss_remat(self, params, x, y, segments: int = 4):
+        """Memonger-style segmented recompute: the network is cut into
+        `segments` checkpointed chunks; only chunk boundaries survive the
+        forward pass (trading compute for memory, paper Fig 11 baseline)."""
+        if self.name.startswith("vgg"):
+            plan = VGG_PLANS[self.name]
+            entries = list(zip(plan, params["layers"]))
+            per = max(1, len(entries) // segments)
+            h = x
+            for s0 in range(0, len(entries), per):
+                chunk = entries[s0 : s0 + per]
+
+                def seg(h, chunk=chunk):
+                    for item, p in chunk:
+                        if item == "M":
+                            h = jax.lax.reduce_window(
+                                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                            )
+                        else:
+                            h = jax.nn.relu(_conv(h, p["w"]) + p["b"])
+                    return h
+
+                h = jax.checkpoint(seg)(h)
+            h = h.mean(axis=(1, 2))
+            head = params["layers"][-1]
+            logits = h @ head["w"] + head["b"]
+        else:
+            stages, bottleneck = RESNET_PLANS[self.name]
+            order = []
+            for si, n in enumerate(stages):
+                for bi in range(n):
+                    order.append((2 if (si > 0 and bi == 0) else 1))
+            h = jax.nn.relu(_conv(x, params["stem"]))
+            per = max(1, len(order) // segments)
+            for s0 in range(0, len(order), per):
+                idxs = list(range(s0, min(s0 + per, len(order))))
+
+                def seg(h, idxs=idxs):
+                    for i in idxs:
+                        h = _apply_block(params["blocks"][i], h, order[i], bottleneck)
+                    return h
+
+                h = jax.checkpoint(seg)(h)
+            h = h.mean(axis=(1, 2))
+            logits = h @ params["head"]["w"] + params["head"]["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    def train_step(self, params, momentum, x, y, lr=0.01, mu=0.9):
+        """SGD+momentum step (the paper trains with SGD on CIFAR-10)."""
+        g = jax.grad(self.loss)(params, x, y)
+
+        def upd(p, m, gg):
+            if gg is None:
+                return p, m
+            m2 = mu * m + gg
+            return p - lr * m2, m2
+
+        new = jax.tree.map(upd, params, momentum, g)
+        new_p = jax.tree.map(lambda t: t[0], new, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], new, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, new_m
+
+    def trace_inputs(self, batch: int = 100):
+        return (
+            jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )

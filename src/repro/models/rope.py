@@ -1,0 +1,54 @@
+"""Rotary position embeddings: standard RoPE and M-RoPE (qwen2-vl).
+
+Positions are explicit everywhere so that decode (single position), prefill
+(arange) and M-RoPE (3-channel t/h/w positions) share one code path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """[head_dim/2] inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions [...] -> angles [..., head_dim/2] (f32)."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(
+    positions: jnp.ndarray, head_dim: int, theta: float, sections: tuple[int, int, int]
+) -> jnp.ndarray:
+    """M-RoPE: positions [3, ...] (t/h/w) -> angles [..., head_dim/2].
+
+    The frequency spectrum is partitioned into ``sections`` (in units of
+    freq pairs, summing to head_dim/2); each section takes its position from
+    the corresponding channel.  Text tokens carry identical t/h/w positions,
+    which makes M-RoPE coincide with RoPE for them.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)
+    full = positions.astype(jnp.float32)[..., None] * inv  # [3, ..., half]
+    chunks = []
+    start = 0
+    for ch, width in enumerate(sections):
+        chunks.append(full[ch, ..., start : start + width])
+        start += width
+    return jnp.concatenate(chunks, axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, n, head_dim] (or [..., S, head_dim]); angles [..., S, head_dim/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if angles.ndim == x.ndim - 1:       # broadcast over the head axis
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -1,0 +1,487 @@
+"""Decoder-only LM assembly: program segments under lax.scan, all families.
+
+One ``Model`` class serves the 8 decoder-only architectures (dense, MoE, MLA,
+SSM, hybrid, VLM); ``encdec.py`` wraps it for whisper.  Execution modes:
+
+  loss(params, batch)                      training forward+CE
+  prefill(params, batch)                   full forward -> (last logits, cache)
+  decode_step(params, cache, tokens, pos)  one token against the cache
+
+Layers are grouped into program segments (configs/base.py); segments with
+repeats > 1 run under ``lax.scan`` with stacked params, which keeps compile
+time flat in depth and makes remat/offload policies uniform per layer class
+(the granularity AutoSwap's planner operates on — see core/offload.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import LayerSpec, ModelConfig, Segment
+from repro.distributed.sharding import shard
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (
+    apply_dense_ffn,
+    apply_norm,
+    chunked_softmax_xent,
+    cross_entropy,
+    dtype_of,
+    embed_tokens,
+    init_dense_ffn,
+    init_embedding,
+    init_norm,
+    lm_logits,
+    rmsnorm,
+)
+from .rope import mrope_angles, rope_angles
+
+# ---------------------------------------------------------------- layers
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": init_norm(cfg)}
+    if spec.attn in ("full", "window"):
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, spec)
+    elif spec.attn == "mla":
+        p["attn"] = mla_mod.init_mla(ks[0], cfg, spec)
+    elif spec.attn == "mamba":
+        p["mamba"] = ssm_mod.init_mamba(ks[0], cfg)
+    elif spec.attn == "hybrid":
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, spec)
+        p["mamba"] = ssm_mod.init_mamba(ks[1], cfg)
+        p["branch_norm_a"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["branch_norm_m"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.sandwich_norms and spec.attn != "none":
+        p["ln1_post"] = init_norm(cfg)
+    if spec.cross_attn:
+        p["ln_cross"] = init_norm(cfg)
+        p["cross"] = attn_mod.init_cross_attention(ks[2], cfg)
+    if spec.ffn == "dense":
+        p["ln2"] = init_norm(cfg)
+        p["ffn"] = init_dense_ffn(ks[3], cfg)
+        if cfg.sandwich_norms:
+            p["ln2_post"] = init_norm(cfg)
+    elif spec.ffn == "moe":
+        p["ln2"] = init_norm(cfg)
+        p["moe"] = moe_mod.init_moe(ks[4], cfg)
+        if cfg.sandwich_norms:
+            p["ln2_post"] = init_norm(cfg)
+    return p
+
+
+def _mix(p, h, cfg, spec, angles, causal):
+    """The token-mixing sublayer (attention family)."""
+    if spec.attn in ("full", "window"):
+        return attn_mod.apply_attention(p["attn"], h, cfg, spec, angles, causal=causal)
+    if spec.attn == "mla":
+        return mla_mod.apply_mla(p["attn"], h, cfg, spec, angles, causal=causal)
+    if spec.attn == "mamba":
+        return ssm_mod.apply_mamba(p["mamba"], h, cfg)
+    if spec.attn == "hybrid":
+        a = attn_mod.apply_attention(p["attn"], h, cfg, spec, angles, causal=causal)
+        m = ssm_mod.apply_mamba(p["mamba"], h, cfg)
+        return 0.5 * (
+            rmsnorm(p["branch_norm_a"], a, cfg.norm_eps)
+            + rmsnorm(p["branch_norm_m"], m, cfg.norm_eps)
+        )
+    return None
+
+
+def apply_layer(p, x, cfg: ModelConfig, spec: LayerSpec, angles, enc_out=None, causal=True):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.attn != "none":
+        h = apply_norm(p["ln1"], x, cfg)
+        h = _mix(p, h, cfg, spec, angles, causal)
+        h = checkpoint_name(h, "attn_out")
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln1_post"], h, cfg)
+        x = x + h
+    if spec.cross_attn:
+        h = apply_norm(p["ln_cross"], x, cfg)
+        kv = attn_mod.encode_cross_kv(p["cross"], enc_out, cfg)
+        h = attn_mod.apply_cross_attention(p["cross"], h, kv, cfg)
+        x = x + h
+    if spec.ffn == "dense":
+        h = apply_norm(p["ln2"], x, cfg)
+        h = apply_dense_ffn(p["ffn"], h, cfg)
+        h = checkpoint_name(h, "ffn_out")
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln2_post"], h, cfg)
+        x = x + h
+    elif spec.ffn == "moe":
+        h = apply_norm(p["ln2"], x, cfg)
+        h, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+        h = checkpoint_name(h, "ffn_out")
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln2_post"], h, cfg)
+        x = x + h
+    x = shard(x, "batch", "seq", "embed")
+    return x, aux
+
+
+# ---------------------------------------------------------------- caches
+
+
+def prefill_layer(p, x, cfg: ModelConfig, spec: LayerSpec, angles, max_seq: int, enc_out=None):
+    """Forward one layer over the whole prompt, emitting its decode cache."""
+    cache: dict[str, Any] = {}
+    if spec.attn in ("full", "window"):
+        h = apply_norm(p["ln1"], x, cfg)
+        h, cache["kv"] = attn_mod.prefill_attention(p["attn"], h, cfg, spec, angles, max_seq)
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln1_post"], h, cfg)
+        x = x + h
+    elif spec.attn == "mla":
+        h = apply_norm(p["ln1"], x, cfg)
+        h, cache["kv"] = mla_mod.prefill_mla(p["attn"], h, cfg, spec, angles, max_seq)
+        x = x + h
+    elif spec.attn == "mamba":
+        h = apply_norm(p["ln1"], x, cfg)
+        h, cache["ssm"] = ssm_mod.apply_mamba(p["mamba"], h, cfg, return_cache=True)
+        x = x + h
+    elif spec.attn == "hybrid":
+        h = apply_norm(p["ln1"], x, cfg)
+        a, cache["kv"] = attn_mod.prefill_attention(p["attn"], h, cfg, spec, angles, max_seq)
+        m, cache["ssm"] = ssm_mod.apply_mamba(p["mamba"], h, cfg, return_cache=True)
+        h = 0.5 * (
+            rmsnorm(p["branch_norm_a"], a, cfg.norm_eps)
+            + rmsnorm(p["branch_norm_m"], m, cfg.norm_eps)
+        )
+        x = x + h
+    if spec.cross_attn:
+        cache["enc_kv"] = attn_mod.encode_cross_kv(p["cross"], enc_out, cfg)
+        h = apply_norm(p["ln_cross"], x, cfg)
+        h = attn_mod.apply_cross_attention(p["cross"], h, cache["enc_kv"], cfg)
+        x = x + h
+    if spec.ffn == "dense":
+        h = apply_norm(p["ln2"], x, cfg)
+        h = apply_dense_ffn(p["ffn"], h, cfg)
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln2_post"], h, cfg)
+        x = x + h
+    elif spec.ffn == "moe":
+        h = apply_norm(p["ln2"], x, cfg)
+        h, _ = moe_mod.apply_moe(p["moe"], h, cfg)
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln2_post"], h, cfg)
+        x = x + h
+    x = shard(x, "batch", "seq", "embed")
+    return x, cache
+
+
+def prefill_program(segs, x, cfg, program, angles, max_seq: int, enc_out=None):
+    caches = []
+    for (unit, reps), seg_params in zip(program, segs):
+
+        def unit_fn(params, x):
+            cache = {}
+            for i, spec in enumerate(unit):
+                x, cache[f"l{i}"] = prefill_layer(
+                    params[f"l{i}"], x, cfg, spec, angles, max_seq, enc_out
+                )
+            return x, cache
+
+        if reps > 1:
+
+            def body(x, params):
+                return unit_fn(params, x)
+
+            x, seg_cache = jax.lax.scan(body, x, seg_params)
+        else:
+            x, seg_cache = unit_fn(seg_params, x)
+        caches.append(seg_cache)
+    return x, caches
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int, dtype):
+    c: dict[str, Any] = {}
+    if spec.attn in ("full", "window"):
+        c["kv"] = attn_mod.init_kv_cache(cfg, spec, batch, max_seq, dtype)
+    elif spec.attn == "mla":
+        c["kv"] = mla_mod.init_mla_cache(cfg, batch, max_seq, dtype)
+    elif spec.attn == "mamba":
+        c["ssm"] = ssm_mod.init_mamba_cache(cfg, batch, dtype)
+    elif spec.attn == "hybrid":
+        c["kv"] = attn_mod.init_kv_cache(cfg, spec, batch, max_seq, dtype)
+        c["ssm"] = ssm_mod.init_mamba_cache(cfg, batch, dtype)
+    if spec.cross_attn:
+        # enc k/v get filled at prefill time
+        H, hd = cfg.num_kv_heads, cfg.head_dim
+        c["enc_kv"] = (
+            jnp.zeros((batch, cfg.enc_seq, H, hd), dtype),
+            jnp.zeros((batch, cfg.enc_seq, H, hd), dtype),
+        )
+    return c
+
+
+def decode_layer(p, x, cache, pos, cfg: ModelConfig, spec: LayerSpec, angles):
+    new_cache = dict(cache)
+    if spec.attn in ("full", "window"):
+        h = apply_norm(p["ln1"], x, cfg)
+        h, new_cache["kv"] = attn_mod.decode_attention(
+            p["attn"], h, cache["kv"], pos, cfg, spec, angles
+        )
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln1_post"], h, cfg)
+        x = x + h
+    elif spec.attn == "mla":
+        h = apply_norm(p["ln1"], x, cfg)
+        h, new_cache["kv"] = mla_mod.decode_mla(p["attn"], h, cache["kv"], pos, cfg, spec, angles)
+        x = x + h
+    elif spec.attn == "mamba":
+        h = apply_norm(p["ln1"], x, cfg)
+        h, new_cache["ssm"] = ssm_mod.decode_mamba(p["mamba"], h, cache["ssm"], cfg)
+        x = x + h
+    elif spec.attn == "hybrid":
+        h = apply_norm(p["ln1"], x, cfg)
+        a, new_cache["kv"] = attn_mod.decode_attention(
+            p["attn"], h, cache["kv"], pos, cfg, spec, angles
+        )
+        m, new_cache["ssm"] = ssm_mod.decode_mamba(p["mamba"], h, cache["ssm"], cfg)
+        h = 0.5 * (
+            rmsnorm(p["branch_norm_a"], a, cfg.norm_eps)
+            + rmsnorm(p["branch_norm_m"], m, cfg.norm_eps)
+        )
+        x = x + h
+    if spec.cross_attn:
+        h = apply_norm(p["ln_cross"], x, cfg)
+        h = attn_mod.apply_cross_attention(p["cross"], h, cache["enc_kv"], cfg)
+        x = x + h
+    if spec.ffn == "dense":
+        h = apply_norm(p["ln2"], x, cfg)
+        h = apply_dense_ffn(p["ffn"], h, cfg)
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln2_post"], h, cfg)
+        x = x + h
+    elif spec.ffn == "moe":
+        h = apply_norm(p["ln2"], x, cfg)
+        h, _ = moe_mod.apply_moe(p["moe"], h, cfg)
+        if cfg.sandwich_norms:
+            h = apply_norm(p["ln2_post"], h, cfg)
+        x = x + h
+    return x, new_cache
+
+
+# --------------------------------------------------------------- program
+
+
+def init_program(key, cfg: ModelConfig, program: tuple[Segment, ...]):
+    """Returns a list of segment params; repeats > 1 get stacked leaves."""
+    segs = []
+    for si, (unit, reps) in enumerate(program):
+        kseg = jax.random.fold_in(key, si)
+
+        def init_unit(k):
+            return {
+                f"l{i}": init_layer(jax.random.fold_in(k, i), cfg, spec)
+                for i, spec in enumerate(unit)
+            }
+
+        if reps > 1:
+            segs.append(jax.vmap(init_unit)(jax.random.split(kseg, reps)))
+        else:
+            segs.append(init_unit(kseg))
+    return segs
+
+
+def apply_program(
+    segs,
+    x,
+    cfg: ModelConfig,
+    program: tuple[Segment, ...],
+    angles,
+    enc_out=None,
+    causal=True,
+    remat: bool = False,
+    remat_policy=None,
+):
+    """Returns (x, total_aux).
+
+    ``remat_policy`` is a jax.checkpoint policy (e.g. the offload policies
+    built by core/offload.py); ``remat=True, remat_policy=None`` is full
+    per-unit rematerialization.
+    """
+    total_aux = jnp.zeros((), jnp.float32)
+    for (unit, reps), seg_params in zip(program, segs):
+
+        def unit_fn(params, x):
+            x = checkpoint_name(x, "block_in")
+            aux = jnp.zeros((), jnp.float32)
+            for i, spec in enumerate(unit):
+                x, a = apply_layer(params[f"l{i}"], x, cfg, spec, angles, enc_out, causal)
+                aux = aux + a
+            return x, aux
+
+        if remat:
+            unit_fn = jax.checkpoint(unit_fn, policy=remat_policy)
+
+        if reps > 1:
+
+            def body(carry, params):
+                x, aux = carry
+                x, a = unit_fn(params, x)
+                return (x, aux + a), None
+
+            (x, total_aux), _ = jax.lax.scan(body, (x, total_aux), seg_params)
+        else:
+            x, a = unit_fn(seg_params, x)
+            total_aux = total_aux + a
+    return x, total_aux
+
+
+def init_program_cache(cfg, program, batch, max_seq, dtype):
+    caches = []
+    for unit, reps in program:
+        unit_cache = {
+            f"l{i}": init_layer_cache(cfg, spec, batch, max_seq, dtype)
+            for i, spec in enumerate(unit)
+        }
+        if reps > 1:
+            unit_cache = jax.tree.map(
+                lambda a: jnp.zeros((reps,) + a.shape, a.dtype), unit_cache
+            )
+        caches.append(unit_cache)
+    return caches
+
+
+def decode_program(segs, caches, x, pos, cfg, program, angles):
+    new_caches = []
+    for (unit, reps), seg_params, seg_cache in zip(program, segs, caches):
+
+        def unit_fn(params, cache, x):
+            new_cache = {}
+            for i, spec in enumerate(unit):
+                x, new_cache[f"l{i}"] = decode_layer(
+                    params[f"l{i}"], x, cache[f"l{i}"], pos, cfg, spec, angles
+                )
+            return x, new_cache
+
+        if reps > 1:
+
+            def body(x, pc):
+                params, cache = pc
+                x, nc = unit_fn(params, cache, x)
+                return x, nc
+
+            x, nc = jax.lax.scan(body, x, (seg_params, seg_cache))
+        else:
+            x, nc = unit_fn(seg_params, seg_cache, x)
+        new_caches.append(nc)
+    return x, new_caches
+
+
+# ------------------------------------------------------------------ model
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters ----
+    def init(self, key):
+        cfg = self.cfg
+        ke, kp = jax.random.split(key)
+        params = {
+            "embed": init_embedding(ke, cfg),
+            "blocks": init_program(kp, cfg, cfg.program),
+            "final_norm": init_norm(cfg),
+        }
+        return params
+
+    def init_shapes(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ---- positions/angles ----
+    def _angles(self, positions):
+        cfg = self.cfg
+        if cfg.num_heads == 0:
+            return None
+        hd = cfg.qk_rope_head_dim if cfg.kv_lora_rank else cfg.head_dim
+        if cfg.mrope_sections is not None:
+            return mrope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+        return rope_angles(positions, hd, cfg.rope_theta)
+
+    def _embed_inputs(self, params, batch):
+        """tokens (+ VLM patch embeds) -> (x [B,S,D], positions)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            patches = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        B, S, _ = x.shape
+        if "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return x, positions
+
+    # ---- training ----
+    def loss(self, params, batch, remat: bool = True, remat_policy=None):
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x = shard(x, "batch", "seq", "embed")
+        angles = self._angles(positions)
+        x, aux = apply_program(
+            params["blocks"], x, cfg, cfg.program, angles,
+            remat=remat, remat_policy=remat_policy,
+        )
+        x = apply_norm(params["final_norm"], x, cfg)
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            npatch = batch["patch_embeds"].shape[1]
+            pad = jnp.full(labels.shape[:1] + (npatch,), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        # chunked CE: position i predicts labels[i+1]; never materializes BSV
+        ce = chunked_softmax_xent(x[:, :-1], params["embed"], labels[:, 1:], cfg)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ---- serving ----
+    def init_cache(self, batch: int, max_seq: int):
+        return init_program_cache(
+            self.cfg, self.cfg.program, batch, max_seq, dtype_of(self.cfg)
+        )
+
+    def prefill(self, params, batch, max_seq: int | None = None):
+        """Forward the prompt, return (last-position logits, filled cache)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x = shard(x, "batch", "seq", "embed")
+        angles = self._angles(positions)
+        S = x.shape[1]
+        max_seq = max_seq or S
+        x, cache = prefill_program(
+            params["blocks"], x, cfg, cfg.program, angles, max_seq
+        )
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params["embed"], x[:, -1:], cfg)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens [B,1] int32, pos scalar int32 -> (logits [B,1,V], cache)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(pos[None, None, None], (3, B, 1))
+        angles = self._angles(positions)
+        x, new_cache = decode_program(
+            params["blocks"], cache, x, pos, cfg, cfg.program, angles
+        )
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)
+        return logits, new_cache

@@ -1,0 +1,88 @@
+"""AdamW + global-norm clipping, pure JAX (no optax dependency offline).
+
+Optimizer state lives as two pytrees (m, v) mirroring the params.  Dtype of
+the moments is configurable: fp32 (default) or bf16 (a distributed-memory
+hillclimb lever — see EXPERIMENTS.md §Perf).  Sharding of the state follows
+the params; the ZeRO-1 variant re-shards m/v over the data axis (see
+launch/train.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class AdamWState:
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads),
+        jnp.zeros((), jnp.float32),
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_step(
+    params,
+    grads,
+    state: AdamWState,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float | None = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        _, gnorm = clip_by_global_norm(grads, 1e30)
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        p2 = p.astype(jnp.float32) * (1.0 - lr * weight_decay) - lr * step
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return new_p, AdamWState(new_m, new_v, count), {"grad_norm": gnorm}
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: ((s.m, s.v, s.count), None),
+    lambda _, c: AdamWState(*c),
+)

@@ -1,0 +1,12 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the 1 real device;
+multi-device lowering is tested via subprocess (test_distributed.py)."""
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

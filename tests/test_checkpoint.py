@@ -1,0 +1,67 @@
+"""Checkpointing: roundtrip, atomicity, keep-k, async, resume."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.int32), "c": [jnp.zeros((2, 2))] * 2},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_pytree(t, str(tmp_path), 7)
+    out, step = restore_pytree(jax.tree.map(lambda x: x, t), str(tmp_path))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 5, 9):
+        mgr.save(tree(), s)
+    assert mgr.latest_step() == 9
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000005", "step_00000009"]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.async_save(tree(), 3)
+    mgr.wait()
+    out, step = mgr.restore(tree())
+    assert step == 3
+
+
+def test_partial_write_is_invisible(tmp_path):
+    """A .tmp dir from a crashed writer must not be picked up."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(tree(), 1)
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert mgr.latest_step() == 1
+    # a step dir without MANIFEST (mid-rename crash) is also skipped
+    os.makedirs(tmp_path / "step_00000003")
+    assert mgr.latest_step() == 1
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_pytree(tree(), str(tmp_path / "nope"))
+
+
+def test_template_dtype_cast(tmp_path):
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    save_pytree(t, str(tmp_path), 0)
+    tpl = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    out, _ = restore_pytree(tpl, str(tmp_path))
+    assert out["w"].dtype == jnp.bfloat16

@@ -1,0 +1,76 @@
+"""Loop-aware analytic cost model + HLO collective census."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import jaxpr_flops_bytes, loop_aware_collectives, _shape_bytes
+
+
+def test_matmul_flops_exact():
+    M, K, N = 64, 128, 32
+
+    def f(a, b):
+        return a @ b
+
+    j = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((M, K), jnp.float32), jax.ShapeDtypeStruct((K, N), jnp.float32)
+    )
+    c = jaxpr_flops_bytes(j)
+    assert c["flops"] == 2 * M * K * N
+
+
+def test_scan_multiplies_flops():
+    M = 32
+
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    def f(c, ws):
+        return jax.lax.scan(body, c, ws)[0]
+
+    c0 = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, M, M), jnp.float32)
+    one = jaxpr_flops_bytes(jax.make_jaxpr(lambda c, w: jnp.tanh(c @ w))(c0, jax.ShapeDtypeStruct((M, M), jnp.float32)))
+    ten = jaxpr_flops_bytes(jax.make_jaxpr(f)(c0, ws))
+    assert abs(ten["flops"] - 10 * one["flops"]) / (10 * one["flops"]) < 0.05
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("bf16[2560,9728]{1,0}") == 2560 * 9728 * 2
+    assert _shape_bytes("(f32[16], f32[16])") == 128
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_loop_aware_census_multiplies_body():
+    hlo = """
+HloModule m
+
+%cond.1 (p: (s32[], f32[16])) -> pred[] {
+  %p = (s32[], f32[16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(36)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body.1 (p: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %p = (s32[], f32[16]) parameter(0)
+  %x = f32[16] get-tuple-element(%p), index=1
+  %ar = f32[16]{0} all-reduce(%x), replica_groups={}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[16]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %a = f32[16] parameter(0)
+  %init = (s32[], f32[16]) tuple(s32[] constant(0), %a)
+  %w = (s32[], f32[16]) while(%init), condition=%cond.1, body=%body.1
+  %g = f32[32]{0} all-gather(%a), dimensions={0}
+  ROOT %r = f32[16] get-tuple-element(%w), index=1
+}
+"""
+    out = loop_aware_collectives(hlo)
+    assert out["all-reduce"]["count"] == 36
+    assert out["all-reduce"]["bytes"] == 36 * 64
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 128
