@@ -1,24 +1,28 @@
 """Paper Fig 10: memory footprint of cudaMalloc / CnMem / SmartPool /
-SmartPool+AutoSwap across batch sizes."""
+SmartPool+AutoSwap across batch sizes, driven through the repro.plan
+pipeline (PoolPlacement over registry methods + the program's swap planner)."""
 
 from __future__ import annotations
 
-from repro.core.autoswap import AutoSwapPlanner
-from repro.core.baseline_pools import CnMemPool
 from repro.core.simulator import GTX_1080TI
-from repro.core.smartpool import solve
+from repro.plan import MemoryProgram, PassContext, Pipeline, PoolPlacement, TimingAssign
 
 from .common import cnn_trace, emit
 
 
 def run(models=("vgg16", "resnet50"), batches=(50, 100, 200)):
     rows = []
+    ctx = PassContext(hw=GTX_1080TI)
     for name in models:
         for b in batches:
             tr = cnn_trace(name, b)
-            sp = solve(tr)
-            cn = CnMemPool().run(tr)
-            pl = AutoSwapPlanner(tr, GTX_1080TI)
+            prog = Pipeline([
+                TimingAssign(),
+                PoolPlacement(("best_fit", "cnmem")),
+            ]).run(MemoryProgram.from_trace(tr), ctx)
+            sp = prog.pool_plans["best_fit"]
+            cn = prog.baselines["cnmem"]
+            pl = prog.swap_planner(ctx.hw, ctx.size_threshold)
             zero_limit, _ = pl.max_zero_overhead_reduction(method="swdoa", grid=16)
             # the "<=15% overhead" point (paper: ~60% footprint reduction)
             best15 = zero_limit

@@ -3,7 +3,8 @@
 For a selection of smoke-scale LM archs, reports SmartPool vs online-pool
 ratios and the AutoSwap zero-overhead reduction of the *training step*
 (TPU v5e hardware model, host-DMA link), plus the offload-name plan the
-training launcher would apply."""
+training launcher would apply.  Runs through the repro.plan pass pipeline:
+TraceCapture -> TimingAssign -> PoolPlacement -> OffloadLowering."""
 
 from __future__ import annotations
 
@@ -11,9 +12,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
-from repro.core.planner import MemoryPlanner
 from repro.core.simulator import TPU_V5E
 from repro.models import build_model
+from repro.plan import (
+    IterationDetect,
+    OffloadLowering,
+    PassContext,
+    Pipeline,
+    PoolPlacement,
+    TimingAssign,
+    TraceCapture,
+    swap_key,
+)
 
 from .common import emit
 
@@ -39,16 +49,29 @@ def run():
         def step(params, batch):
             return model.loss(params, batch)[0]
 
-        planner = MemoryPlanner(step, pshapes, batch, hw=TPU_V5E, size_threshold=1 << 18)
-        rep = planner.report()
-        limit, ov = planner.swap.max_zero_overhead_reduction(method="swdoa", grid=12)
-        red = 100 * (1 - limit / max(planner.swap.peak_load, 1))
-        plan = planner.offload_plan(int(planner.swap.peak_load * 0.8))
+        ctx = PassContext(hw=TPU_V5E, size_threshold=1 << 18)
+        prog = Pipeline([
+            TraceCapture(step, (pshapes, batch), max_scan_unroll=16),
+            IterationDetect(),
+            TimingAssign(),
+            PoolPlacement(("best_fit", "cnmem", "exact")),
+        ]).run(None, ctx)
+        sp = prog.pool_plans["best_fit"]
+        cn = prog.baselines["cnmem"]
+        cnmem_ratio = cn.footprint / sp.peak_load if sp.peak_load else 1.0
+        num_vars = len([v for v in prog.variables if v.size > 0])
+
+        swap = prog.swap_planner(ctx.hw, ctx.size_threshold)
+        limit, ov = swap.max_zero_overhead_reduction(method="swdoa", grid=12)
+        red = 100 * (1 - limit / max(swap.peak_load, 1))
+        off_limit = int(swap.peak_load * 0.8)
+        prog = Pipeline([OffloadLowering(off_limit)]).run(prog, ctx)
+        plan = prog.offload_plans[swap_key("swdoa", off_limit)]
         rows.append((
             f"planner_lm/{arch}",
             "0",
-            f"vars={rep.num_variables}"
-            f"|smartpool={rep.smartpool_ratio:.4f}|cnmem={rep.cnmem_ratio:.4f}"
+            f"vars={num_vars}"
+            f"|smartpool={sp.competitive_ratio:.4f}|cnmem={cnmem_ratio:.4f}"
             f"|zero_ov_reduction={red:.1f}%"
             f"|offload={'+'.join(plan.offload_names) or 'none'}",
         ))

@@ -1,8 +1,12 @@
 """Paper Table I: competitive ratio + time complexity of SmartPool vs
-CnMem-style pool vs cudaMalloc, on VGG/ResNet traces at batch 100."""
+CnMem-style pool vs cudaMalloc, on VGG/ResNet traces at batch 100.
+
+CLI accepts ``--models`` / ``--batch`` so CI can run a tiny smoke subset
+(e.g. ``--models vgg11 --batch 4``) and regression-check the ratios."""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 from repro.core.baseline_pools import CnMemPool, exact_allocator
@@ -12,9 +16,9 @@ from repro.core.smartpool import solve
 from .common import CNN_MODELS, cnn_trace, emit
 
 
-def run(batch: int = 100):
+def run(batch: int = 100, models=CNN_MODELS):
     rows = []
-    for name in CNN_MODELS:
+    for name in models:
         tr = cnn_trace(name, batch)
         t0 = time.time()
         sp = solve(tr, "best_fit")
@@ -36,8 +40,12 @@ def run(batch: int = 100):
     return rows
 
 
-def main():
-    emit(run())
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="+", default=list(CNN_MODELS), choices=CNN_MODELS)
+    ap.add_argument("--batch", type=int, default=100)
+    args = ap.parse_args(argv)
+    emit(run(batch=args.batch, models=tuple(args.models)))
 
 
 if __name__ == "__main__":

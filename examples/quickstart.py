@@ -3,13 +3,19 @@
     PYTHONPATH=src python examples/quickstart.py
 
 1. builds a small qwen3-family model,
-2. extracts the step's variable lifetimes (model-transparently, via jaxpr),
-3. runs SmartPool (offline DSA) and compares against the CnMem-style online
-   pool and the exact allocator — the paper's Table I quantities,
-4. runs AutoSwap to find the largest zero-overhead memory-load reduction —
-   the paper's Table II quantity,
+2. runs the repro.plan pipeline on its train step: TraceCapture extracts the
+   step's variable lifetimes (model-transparently, via jaxpr) into a
+   MemoryProgram, PoolPlacement runs SmartPool (offline DSA) against the
+   CnMem-style online pool and the exact allocator — the paper's Table I
+   quantities,
+3. runs AutoSwap scorers from the strategy registry to find the largest
+   zero-overhead memory-load reduction — the paper's Table II quantity,
+4. persists the solved plan to an on-disk artifact and reloads it, showing
+   the solve-once/reuse-forever contract (paper §V),
 5. trains a few steps to show nothing about the model changed.
 """
+
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +27,7 @@ from repro.core.planner import MemoryPlanner
 from repro.models import build_model
 from repro.optim import adamw_init
 from repro.launch.steps import build_train_step
+from repro.plan import PlanCache, PlanKey, scorer_names
 
 
 def main():
@@ -41,20 +48,30 @@ def main():
         return model.loss(params, batch)[0]
 
     print("== planning (model-transparent, from the jaxpr) ==")
-    planner = MemoryPlanner(step, pshapes, batch, hw=TPU_V5E)
-    rep = planner.report()
-    print(f" variables            : {rep.num_variables}")
-    print(f" peak load omega(G)   : {rep.peak_load/2**20:8.2f} MiB")
-    print(f" SmartPool chi(G)     : {rep.smartpool_footprint/2**20:8.2f} MiB "
-          f"(ratio {rep.smartpool_ratio:.4f})")
-    print(f" CnMem-style pool     : {rep.cnmem_footprint/2**20:8.2f} MiB "
-          f"(ratio {rep.cnmem_ratio:.4f})")
+    with tempfile.TemporaryDirectory() as plan_dir:
+        cache = PlanCache(plan_dir)
+        key = PlanKey("quickstart", f"train:b{B}s{S}", TPU_V5E.name)
+        planner = MemoryPlanner(step, pshapes, batch, hw=TPU_V5E, cache=cache, key=key)
+        rep = planner.report()
+        print(f" variables            : {rep.num_variables}")
+        print(f" peak load omega(G)   : {rep.peak_load/2**20:8.2f} MiB")
+        print(f" SmartPool chi(G)     : {rep.smartpool_footprint/2**20:8.2f} MiB "
+              f"(ratio {rep.smartpool_ratio:.4f})")
+        print(f" CnMem-style pool     : {rep.cnmem_footprint/2**20:8.2f} MiB "
+              f"(ratio {rep.cnmem_ratio:.4f})")
 
-    print("\n== AutoSwap: zero-overhead reduction per priority score ==")
-    for m in ("doa", "aoa", "wdoa", "swdoa"):
-        limit, ov = planner.swap.max_zero_overhead_reduction(method=m, grid=16)
-        red = 100 * (1 - limit / max(planner.swap.peak_load, 1))
-        print(f"  {m:6s}: load -> {limit/2**20:8.2f} MiB  (-{red:.1f}%), overhead {ov*100:.2f}%")
+        print("\n== AutoSwap: zero-overhead reduction per priority score ==")
+        for m in (s for s in scorer_names() if s != "bo"):
+            limit, ov = planner.swap.max_zero_overhead_reduction(method=m, grid=16)
+            red = 100 * (1 - limit / max(planner.swap.peak_load, 1))
+            print(f"  {m:6s}: load -> {limit/2**20:8.2f} MiB  (-{red:.1f}%), overhead {ov*100:.2f}%")
+
+        print("\n== solve once, reuse forever: reload the plan artifact ==")
+        reloaded = MemoryPlanner(None, cache=cache, key=key)  # no step_fn: no re-trace
+        rep2 = reloaded.report()
+        assert rep2.as_dict() == rep.as_dict()
+        print(f" artifact {cache.keys()[0]}.json restored "
+              f"(from_cache={reloaded.from_cache}), reports identical")
 
     print("\n== training (unchanged numerics) ==")
     params = model.init(jax.random.PRNGKey(0))

@@ -9,8 +9,11 @@ Public surface:
   autoswap    — candidates, DOA/AOA/WDOA/SWDOA priority scores, selection
   simulator   — timing model + discrete-event swap-schedule simulator
   bayesopt    — GP+EI tuner for the combined priority score
-  planner     — MemoryPlanner: plans for real jitted step functions
+  planner     — MemoryPlanner: facade over the repro.plan pass pipeline
   offload     — remat/pinned_host offload policies driven by AutoSwap
+
+The staged pipeline itself (MemoryProgram IR, passes, strategy registry,
+on-disk plan artifacts) lives in repro.plan.
 """
 
 from . import autoswap, baseline_pools, bayesopt, events, iteration, simulator, smartpool, trace  # noqa: F401

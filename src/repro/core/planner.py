@@ -1,12 +1,17 @@
-"""MemoryPlanner: the paper's pipeline applied to real jitted step functions.
+"""MemoryPlanner: facade over the repro.plan pass pipeline.
 
-    step_fn --jaxpr--> IterationTrace --SmartPool--> allocation plan
-                                     \\--AutoSwap--> swap schedule
-                                                 \\--> OffloadPlan (remat names)
+    step_fn --TraceCapture--> MemoryProgram --PoolPlacement--> allocation plan
+                                           \\--SwapSelection--> swap schedule
+                                                            \\--> OffloadLowering
 
 This is the model-transparent entry point: it needs only the step function
 and example shapes (exactly like the paper's Device needs only the event
-stream).  Outputs:
+stream).  Since the pipeline refactor every stage is a pass over a
+``repro.plan.MemoryProgram`` and the solved results can be cached on disk
+(``cache=PlanCache(dir), key=PlanKey(arch, step_sig, hw)``): a second
+process with the same key reloads the artifact and never re-traces.
+
+Outputs:
 
   * ``report()``     — peak load omega(G), SmartPool chi(G) + competitive
                        ratio vs the CnMem-style online pool and the exact
@@ -22,13 +27,23 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable
 
+from ..plan.artifact import PlanCache
+from ..plan.passes import (
+    ArtifactSave,
+    IterationDetect,
+    OffloadLowering,
+    PassContext,
+    Pipeline,
+    PoolPlacement,
+    SwapSelection,
+    TimingAssign,
+    TraceCapture,
+)
+from ..plan.program import MemoryProgram, PlanKey, swap_key
 from .autoswap import AutoSwapPlanner, ScoreName
-from .baseline_pools import CnMemPool, exact_allocator
 from .events import IterationTrace
-from .offload import KNOWN_NAMES, OffloadPlan
-from .simulator import TPU_V5E, HardwareSpec, assign_times
-from .smartpool import AllocationPlan, solve as smartpool_solve
-from .trace import trace_step_fn
+from .offload import OffloadPlan
+from .simulator import TPU_V5E, HardwareSpec
 
 
 @dataclass
@@ -58,26 +73,67 @@ class SwapReport:
 
 
 class MemoryPlanner:
+    """Thin facade: builds the front-end pipeline once, then answers report
+    queries by running the matching middle-end passes over the program."""
+
     def __init__(
         self,
-        step_fn: Callable,
+        step_fn: Callable | None = None,
         *example_args,
         hw: HardwareSpec = TPU_V5E,
         max_scan_unroll: int = 16,
         size_threshold: int = 1 << 20,
+        cache: PlanCache | str | None = None,
+        key: PlanKey | None = None,
     ):
         self.hw = hw
-        self.trace: IterationTrace = trace_step_fn(
-            step_fn, *example_args, max_scan_unroll=max_scan_unroll
+        if isinstance(cache, str):
+            cache = PlanCache(cache)
+        if cache is not None and key is None:
+            raise ValueError("a plan cache requires an explicit PlanKey")
+        self.ctx = PassContext(
+            hw=hw, cache=cache, key=key, size_threshold=size_threshold
         )
-        assign_times(self.trace, hw)
-        self.swap = AutoSwapPlanner(self.trace, hw, size_threshold=size_threshold)
+        self.program: MemoryProgram = Pipeline(
+            [
+                TraceCapture(step_fn, example_args, max_scan_unroll=max_scan_unroll),
+                IterationDetect(),
+                TimingAssign(),
+            ]
+        ).run(None, self.ctx)
+
+    # ---------------------------------------------------------- IR accessors
+    @property
+    def trace(self) -> IterationTrace:
+        return self.program.require_trace()
+
+    @property
+    def swap(self) -> AutoSwapPlanner:
+        return self.program.swap_planner(self.hw, self.ctx.size_threshold)
+
+    @property
+    def from_cache(self) -> bool:
+        return self.program.from_cache
+
+    def save(self) -> None:
+        """Persist the program's solved artifacts now (also done per-query)."""
+        self.program.dirty = True
+        ArtifactSave().run(self.program, self.ctx)
+
+    def _run(self, *passes) -> MemoryProgram:
+        return Pipeline([*passes, ArtifactSave()]).run(self.program, self.ctx)
 
     # ------------------------------------------------------------- pooling
     def report(self, method: str = "best_fit") -> PoolReport:
-        plan: AllocationPlan = smartpool_solve(self.trace, method)
-        cn = CnMemPool().run(self.trace)
-        ex = exact_allocator(self.trace)
+        self._run(PoolPlacement((method, "cnmem", "exact")))
+        if method not in self.program.pool_plans:
+            raise ValueError(
+                f"{method!r} is a baseline pool, not a placement method; "
+                f"placement methods produce an AllocationPlan (e.g. best_fit, first_fit)"
+            )
+        plan = self.program.pool_plans[method]
+        cn = self.program.baselines["cnmem"]
+        ex = self.program.baselines["exact"]
         return PoolReport(
             peak_load=plan.peak_load,
             smartpool_footprint=plan.footprint,
@@ -92,49 +148,26 @@ class MemoryPlanner:
     def swap_report(
         self, limit: int, method: ScoreName | None = "swdoa", weights=None
     ) -> SwapReport:
-        decisions = self.swap.select(limit, method, weights)
-        sim = self.swap.evaluate(limit, method, weights)
-        by_id = self.trace.by_id()
-        per_name: dict[str, int] = {}
-        for d in decisions:
-            name = by_id[d.var].name or "?"
-            per_name[name] = per_name.get(name, 0) + d.size
+        scorer = method or "swdoa"
+        self._run(SwapSelection(limit, scorer, weights))
+        s = self.program.swap_summaries[swap_key(scorer, limit, weights)]
         return SwapReport(
-            limit=limit,
-            peak_load=self.swap.peak_load,
-            load_min=self.swap.load_min(),
-            selected_bytes=sum(d.size for d in decisions),
-            num_selected=len(decisions),
-            overhead=sim.overhead,
-            stalls=sim.stalls,
-            per_name_bytes=per_name,
+            limit=s.limit,
+            peak_load=s.peak_load,
+            load_min=s.load_min,
+            selected_bytes=s.selected_bytes,
+            num_selected=len(s.decisions),
+            overhead=s.overhead,
+            stalls=s.stalls,
+            per_name_bytes=dict(s.per_name_bytes),
         )
 
     # ------------------------------------------------------------- offload
     def offload_plan(
         self, limit: int, method: ScoreName | None = "swdoa", weights=None
     ) -> OffloadPlan:
-        """Coarsen the per-variable selection to checkpoint_name classes.
-
-        A name class is offloaded when the planner selected a majority of its
-        candidate bytes — the scan-uniformity coarsening documented in
-        DESIGN.md §2.
-        """
-        decisions = self.swap.select(limit, method, weights)
-        by_id = self.trace.by_id()
-        selected: dict[str, int] = {}
-        total: dict[str, int] = {}
-        for c in self.swap.candidates:
-            name = by_id[c.var].name or ""
-            if name in KNOWN_NAMES:
-                total[name] = total.get(name, 0) + c.size
-        chosen_vars = {d.var for d in decisions}
-        for c in self.swap.candidates:
-            name = by_id[c.var].name or ""
-            if name in KNOWN_NAMES and c.var in chosen_vars:
-                selected[name] = selected.get(name, 0) + c.size
-        names = [n for n, b in selected.items() if b >= 0.5 * total.get(n, 1)]
-        plan = OffloadPlan(offload_names=sorted(names))
-        plan.predicted_savings = sum(selected.values())
-        plan.transfer_bytes = 2 * plan.predicted_savings
-        return plan
+        """Coarsen the per-variable selection to checkpoint_name classes
+        (the OffloadLowering pass; see repro/plan/passes.py)."""
+        scorer = method or "swdoa"
+        self._run(OffloadLowering(limit, scorer, weights))
+        return self.program.offload_plans[swap_key(scorer, limit, weights)]

@@ -1,16 +1,22 @@
 """Batched serving driver: prefill then decode with KV caches.
 
 Serves a (smoke or full) model on the available devices: batches requests,
-prefim-fills the cache from the prompt, then decodes greedily with the
+prefill-fills the cache from the prompt, then decodes greedily with the
 donated-cache serve step — the same functions the decode dry-run cells
 lower.  The AutoSwap planner can report on the serve step too (--plan):
 with MoE models its candidate filter picks up inactive expert shards, with
 dense models the KV cache dominates and the planner correctly reports
 nothing swappable below the threshold (documented behaviour, DESIGN.md §6).
 
+With ``--plan-cache DIR`` the prefill and decode step plans are solved
+through the repro.plan pipeline and persisted as per-arch artifacts keyed
+by (arch, step signature, hardware): a second serving process — e.g. a
+decode worker next to a prefill worker, or the next restart — restores the
+solved plan from DIR instead of re-tracing the step.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--plan] [--plan-cache /tmp/plans]
 """
 
 from __future__ import annotations
@@ -25,6 +31,69 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models import build_model
 
 
+def serve_batch_struct(cfg, B: int, P: int) -> dict:
+    """Shape/dtype spec of one serving batch — the single source of truth
+    shared by the planner (abstract trace) and main() (concrete arrays)."""
+    batch = {"tokens": jax.ShapeDtypeStruct((B, P), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        npatch = min(cfg.num_patch_tokens, 8)
+        batch["patch_embeds"] = jax.ShapeDtypeStruct((B, npatch, cfg.d_model), jnp.float32)
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, P + npatch), jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def plan_serve_steps(model, cfg, args, max_seq: int):
+    """Solve (or restore) the memory plans for the prefill and decode steps.
+
+    Returns {role: (planner, PoolReport)} for "prefill" and "decode".
+    """
+    from repro.core.planner import MemoryPlanner
+    from repro.core.simulator import TPU_V5E
+    from repro.plan import PlanCache, PlanKey
+
+    plan_cache = PlanCache(args.plan_cache) if args.plan_cache else None
+    B, P = args.batch, args.prompt_len
+    pshapes = model.init_shapes()
+    batch = serve_batch_struct(cfg, B, P)
+
+    def prefill_fn(params, b):
+        return model.prefill(params, b, max_seq=max_seq)
+
+    _, cache_struct = jax.eval_shape(prefill_fn, pshapes, batch)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    steps = {
+        "prefill": (prefill_fn, (pshapes, batch)),
+        "decode": (model.decode_step, (pshapes, cache_struct, tok, pos)),
+    }
+    smoke = ":smoke" if args.smoke else ""
+    out = {}
+    for role, (fn, fargs) in steps.items():
+        key = PlanKey(args.arch, f"{role}:b{B}p{P}s{max_seq}{smoke}", TPU_V5E.name)
+        planner = MemoryPlanner(
+            fn, *fargs, hw=TPU_V5E, cache=plan_cache, key=key, size_threshold=1 << 18
+        )
+        rep = planner.report()
+        src = "restored from cache" if planner.from_cache else "solved"
+        print(
+            f"[plan] {role}: {src}  vars={rep.num_variables} "
+            f"peak={rep.peak_load/2**20:.1f}MiB smartpool x{rep.smartpool_ratio:.4f} "
+            f"cnmem x{rep.cnmem_ratio:.4f}"
+        )
+        # AutoSwap at 80% of peak: MoE models surface inactive expert shards
+        # here; dense models correctly report nothing swappable (DESIGN.md §6).
+        sw = planner.swap_report(int(rep.peak_load * 0.8))
+        print(
+            f"[plan] {role}: AutoSwap@80%: {sw.num_selected} vars "
+            f"({sw.selected_bytes/2**20:.1f}MiB) swappable, "
+            f"simulated overhead {sw.overhead*100:.2f}%"
+        )
+        out[role] = (planner, rep)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list_archs(), default="qwen3-4b")
@@ -33,6 +102,11 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan", action="store_true",
+                    help="print SmartPool/AutoSwap reports for prefill + decode steps")
+    ap.add_argument("--plan-cache", default=None,
+                    help="directory of solved plan artifacts shared across "
+                         "prefill/decode processes (solve once, reload after)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -41,17 +115,20 @@ def main(argv=None):
 
     B, P = args.batch, args.prompt_len
     max_seq = P + args.gen + (cfg.num_patch_tokens if cfg.frontend == "vision_stub" else 0)
+
+    if args.plan or args.plan_cache:
+        plan_serve_steps(model, cfg, args, max_seq)
     key = jax.random.PRNGKey(args.seed + 1)
-    batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size, jnp.int32)}
-    if cfg.frontend == "vision_stub":
-        npatch = min(cfg.num_patch_tokens, 8)
-        batch["patch_embeds"] = jnp.zeros((B, npatch, cfg.d_model), jnp.float32)
-        S = P + npatch
+    spec = serve_batch_struct(cfg, B, P)
+    batch = {"tokens": jax.random.randint(key, spec["tokens"].shape, 0, cfg.vocab_size, jnp.int32)}
+    if "patch_embeds" in spec:
+        batch["patch_embeds"] = jnp.zeros(spec["patch_embeds"].shape, spec["patch_embeds"].dtype)
+        S = spec["positions"].shape[-1]
         batch["positions"] = jnp.broadcast_to(
-            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S)
+            jnp.arange(S, dtype=jnp.int32)[None, None], spec["positions"].shape
         )
-    if cfg.is_encoder_decoder:
-        batch["frames"] = jnp.zeros((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if "frames" in spec:
+        batch["frames"] = jnp.zeros(spec["frames"].shape, spec["frames"].dtype)
 
     t0 = time.time()
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_seq=max_seq))

@@ -6,6 +6,9 @@ AdamW, checkpoint/restart, and the paper's memory planner wired in:
 
   * ``--plan``       print the SmartPool/AutoSwap report for this exact step
                      function before training (jaxpr-transparent, §III/§IV);
+  * ``--plan-cache`` directory of solved plan artifacts: the one-time solve
+                     is keyed by (arch, step signature, hardware) and reused
+                     across restarts / sibling processes without re-tracing;
   * ``--hbm-limit``  GB budget per device: AutoSwap picks the activation
                      classes to offload (pinned_host) and the train step is
                      rebuilt with that remat policy (§IV applied via XLA).
@@ -75,6 +78,8 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=-1, help="inject a crash at step N (tests)")
     ap.add_argument("--step-timeout", type=float, default=10.0, help="straggler factor vs median")
     ap.add_argument("--plan", action="store_true", help="print SmartPool/AutoSwap report")
+    ap.add_argument("--plan-cache", default=None,
+                    help="directory of solved plan artifacts (reused across runs)")
     ap.add_argument("--hbm-limit-gb", type=float, default=None,
                     help="AutoSwap offload budget per device (GB)")
     ap.add_argument("--log-every", type=int, default=10)
@@ -85,18 +90,26 @@ def main(argv=None):
     batch_fn = make_batch_fn(cfg, args.batch, args.seq, args.seed)
 
     remat_policy = None
-    if args.plan or args.hbm_limit_gb is not None:
+    if args.plan or args.plan_cache or args.hbm_limit_gb is not None:
+        from repro.core.simulator import TPU_V5E
+        from repro.plan import PlanCache, PlanKey
+
         probe = jax.eval_shape(lambda: batch_fn(0))
         pshapes = model.init_shapes()
 
         def step_probe(params, batch):
             return model.loss(params, batch)[0]
 
-        planner = MemoryPlanner(step_probe, pshapes, probe)
+        plan_cache = PlanCache(args.plan_cache) if args.plan_cache else None
+        smoke = ":smoke" if args.smoke else ""
+        key = PlanKey(args.arch, f"train:b{args.batch}s{args.seq}{smoke}", TPU_V5E.name)
+        planner = MemoryPlanner(step_probe, pshapes, probe, hw=TPU_V5E,
+                                cache=plan_cache, key=key)
         rep = planner.report()
+        src = " (restored from cache)" if planner.from_cache else ""
         print(
             f"[plan] vars={rep.num_variables} peak={rep.peak_load/2**20:.1f}MiB "
-            f"smartpool x{rep.smartpool_ratio:.4f} cnmem x{rep.cnmem_ratio:.4f}"
+            f"smartpool x{rep.smartpool_ratio:.4f} cnmem x{rep.cnmem_ratio:.4f}{src}"
         )
         if args.hbm_limit_gb is not None:
             limit = int(args.hbm_limit_gb * 2**30)

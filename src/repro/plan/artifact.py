@@ -1,0 +1,241 @@
+"""Plan artifacts: JSON persistence of solved MemoryPrograms.
+
+The one-time solve (SmartPool placement, AutoSwap schedules, offload
+lowering) is serialized keyed by (arch, step signature, hardware) so a
+second process — the next training run, or the decode server next to the
+prefill server — reloads the solution instead of re-tracing and re-solving.
+
+Serialization is *canonical* (sorted keys, fixed separators) so equality of
+plans is equality of bytes; tests round-trip on that property.  Writes are
+atomic (tmp file + rename) so concurrent processes sharing one cache
+directory never observe a torn artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+
+from ..core.baseline_pools import PoolStats
+from ..core.events import IterationTrace, VariableInfo
+from ..core.offload import OffloadPlan
+from ..core.simulator import SwapDecision
+from ..core.smartpool import AllocationPlan
+from .program import MemoryProgram, PlanKey, SwapSummary
+
+PLAN_FORMAT_VERSION = 1
+
+
+# ------------------------------------------------------------- to JSON dicts
+def _trace_to_json(trace: IterationTrace) -> dict:
+    return {
+        "num_indices": trace.num_indices,
+        "variables": [
+            [
+                v.var,
+                v.size,
+                v.alloc_index,
+                v.free_index,
+                list(v.accesses),
+                [1 if w else 0 for w in v.access_is_write],
+                v.name,
+            ]
+            for v in trace.variables
+        ],
+        "op_times": trace.op_times,
+        "op_costs": (
+            {str(i): [f, b] for i, (f, b) in sorted(trace.op_costs.items())}
+            if trace.op_costs is not None
+            else None
+        ),
+    }
+
+
+def _trace_from_json(d: dict) -> IterationTrace:
+    variables = [
+        VariableInfo(
+            var=var,
+            size=size,
+            alloc_index=alloc,
+            free_index=free,
+            accesses=list(acc),
+            access_is_write=[bool(w) for w in wr],
+            name=name,
+        )
+        for var, size, alloc, free, acc, wr, name in d["variables"]
+    ]
+    trace = IterationTrace(variables, d["num_indices"])
+    trace.op_times = d["op_times"]
+    if d["op_costs"] is not None:
+        trace.op_costs = {int(i): (fb[0], fb[1]) for i, fb in d["op_costs"].items()}
+    return trace
+
+
+def _alloc_plan_to_json(p: AllocationPlan) -> dict:
+    return {
+        "offsets": {str(k): v for k, v in p.offsets.items()},
+        "footprint": p.footprint,
+        "peak_load": p.peak_load,
+        "method": p.method,
+        "lookup": {str(k): v for k, v in p.lookup.items()},
+    }
+
+
+def _alloc_plan_from_json(d: dict) -> AllocationPlan:
+    return AllocationPlan(
+        offsets={int(k): v for k, v in d["offsets"].items()},
+        footprint=d["footprint"],
+        peak_load=d["peak_load"],
+        method=d["method"],
+        lookup={int(k): v for k, v in d["lookup"].items()},
+    )
+
+
+def _summary_to_json(s: SwapSummary) -> dict:
+    return {
+        "scorer": s.scorer,
+        "limit": s.limit,
+        "decisions": [
+            [d.var, d.size, d.out_after, d.in_before, 1 if d.wraps else 0]
+            for d in s.decisions
+        ],
+        "peak_load": s.peak_load,
+        "load_min": s.load_min,
+        "overhead": s.overhead,
+        "stalls": s.stalls,
+        "per_name_bytes": dict(sorted(s.per_name_bytes.items())),
+        "size_threshold": s.size_threshold,
+        "hardware": s.hardware,
+    }
+
+
+def _summary_from_json(d: dict) -> SwapSummary:
+    return SwapSummary(
+        scorer=d["scorer"],
+        limit=d["limit"],
+        decisions=[
+            SwapDecision(var, size, out_after, in_before, bool(wraps))
+            for var, size, out_after, in_before, wraps in d["decisions"]
+        ],
+        peak_load=d["peak_load"],
+        load_min=d["load_min"],
+        overhead=d["overhead"],
+        stalls=d["stalls"],
+        per_name_bytes=dict(d["per_name_bytes"]),
+        size_threshold=d["size_threshold"],
+        hardware=d["hardware"],
+    )
+
+
+def _offload_to_json(p: OffloadPlan) -> dict:
+    return {
+        "offload_names": list(p.offload_names),
+        "save_names": list(p.save_names),
+        "predicted_savings": p.predicted_savings,
+        "transfer_bytes": p.transfer_bytes,
+    }
+
+
+def _offload_from_json(d: dict) -> OffloadPlan:
+    plan = OffloadPlan(
+        offload_names=list(d["offload_names"]), save_names=list(d["save_names"])
+    )
+    plan.predicted_savings = d["predicted_savings"]
+    plan.transfer_bytes = d["transfer_bytes"]
+    return plan
+
+
+def program_to_json(program: MemoryProgram) -> dict:
+    trace = program.require_trace()
+    return {
+        "version": PLAN_FORMAT_VERSION,
+        "key": (
+            {
+                "arch": program.key.arch,
+                "step_signature": program.key.step_signature,
+                "hardware": program.key.hardware,
+            }
+            if program.key
+            else None
+        ),
+        "trace": _trace_to_json(trace),
+        "pool_plans": {m: _alloc_plan_to_json(p) for m, p in sorted(program.pool_plans.items())},
+        "baselines": {
+            m: {"footprint": s.footprint, "peak_load": s.peak_load, "num_mallocs": s.num_mallocs}
+            for m, s in sorted(program.baselines.items())
+        },
+        "swap_summaries": {k: _summary_to_json(s) for k, s in sorted(program.swap_summaries.items())},
+        "offload_plans": {k: _offload_to_json(p) for k, p in sorted(program.offload_plans.items())},
+    }
+
+
+def program_from_json(d: dict) -> MemoryProgram:
+    if d.get("version") != PLAN_FORMAT_VERSION:
+        raise ValueError(f"unsupported plan artifact version {d.get('version')!r}")
+    key = PlanKey(**d["key"]) if d.get("key") else None
+    program = MemoryProgram(trace=_trace_from_json(d["trace"]), key=key)
+    program.pool_plans = {m: _alloc_plan_from_json(p) for m, p in d["pool_plans"].items()}
+    program.baselines = {
+        m: PoolStats(s["footprint"], s["peak_load"], s["num_mallocs"])
+        for m, s in d["baselines"].items()
+    }
+    program.swap_summaries = {k: _summary_from_json(s) for k, s in d["swap_summaries"].items()}
+    program.offload_plans = {k: _offload_from_json(p) for k, p in d["offload_plans"].items()}
+    return program
+
+
+def dumps_canonical(program: MemoryProgram) -> str:
+    """Canonical byte form: plans are equal iff their dumps are equal."""
+    return json.dumps(program_to_json(program), sort_keys=True, separators=(",", ":"))
+
+
+class PlanCache:
+    """Directory of solved-plan artifacts, one JSON file per PlanKey."""
+
+    def __init__(self, root: "str | Path"):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def path_for(self, key: PlanKey) -> Path:
+        return self.root / f"{key.cache_name()}.json"
+
+    def load(self, key: PlanKey) -> MemoryProgram | None:
+        path = self.path_for(key)
+        if not path.exists():
+            return None
+        try:
+            with path.open() as f:
+                program = program_from_json(json.load(f))
+        except (OSError, json.JSONDecodeError, KeyError, TypeError, ValueError) as e:
+            # A corrupt/stale artifact is a cache miss, not a crash: the
+            # caller re-solves and overwrites it.
+            import warnings
+
+            warnings.warn(f"ignoring unreadable plan artifact {path}: {e}")
+            return None
+        program.key = key
+        program.from_cache = True
+        return program
+
+    def store(self, program: MemoryProgram) -> Path:
+        if program.key is None:
+            raise ValueError("cannot store a MemoryProgram without a PlanKey")
+        path = self.path_for(program.key)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            # mkstemp creates 0600; artifacts are shared between processes
+            # (prefill/decode workers may run as different users).
+            os.fchmod(fd, 0o644)
+            with os.fdopen(fd, "w") as f:
+                f.write(dumps_canonical(program))
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path
+
+    def keys(self) -> list[str]:
+        return sorted(p.stem for p in self.root.glob("*.json"))

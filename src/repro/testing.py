@@ -1,0 +1,167 @@
+"""Property-test shim: hypothesis when available, deterministic fallback when not.
+
+The test suite's invariants (pool validity, schedule monotonicity, kernel
+oracles) are expressed as properties over generated inputs.  ``hypothesis``
+is an optional dependency; this module re-exports its ``given``/``settings``/
+``strategies`` when installed and otherwise substitutes a miniature,
+deterministic generator so the same property functions still execute against
+a fixed, seeded sample set (boundary values first, then pseudo-random draws).
+
+Usage in tests:
+
+    from repro.testing import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    FALLBACK_EXAMPLES = 12
+
+    class _Strategy:
+        """Mini strategy: ``example(rnd, i)`` yields the i-th deterministic
+        draw; i == 0/1 hit the boundaries so degenerate cases always run."""
+
+        def example(self, rnd: random.Random, i: int):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rnd, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rnd.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rnd, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rnd.uniform(self.lo, self.hi)
+
+        def filter(self, pred):
+            return _Filtered(self, pred)
+
+    class _Filtered(_Strategy):
+        def __init__(self, base: _Strategy, pred):
+            self.base, self.pred = base, pred
+
+        def example(self, rnd, i):
+            for attempt in range(100):
+                x = self.base.example(rnd, i if attempt == 0 else 2)
+                if self.pred(x):
+                    return x
+            raise ValueError("fallback filter rejected 100 consecutive draws")
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def example(self, rnd, i):
+            if i < len(self.seq):
+                return self.seq[i]
+            return rnd.choice(self.seq)
+
+    class _Tuples(_Strategy):
+        def __init__(self, *members):
+            self.members = members
+
+        def example(self, rnd, i):
+            return tuple(m.example(rnd, i) for m in self.members)
+
+    class _Lists(_Strategy):
+        def __init__(self, elem: _Strategy, min_size: int = 0, max_size: int = 10):
+            self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+        def example(self, rnd, i):
+            if i == 0:
+                size = self.min_size
+            elif i == 1:
+                size = self.max_size
+            else:
+                size = rnd.randint(self.min_size, self.max_size)
+            # Element draws use index >= 2 so list contents vary even in the
+            # boundary-size examples.
+            return [self.elem.example(rnd, 2) for _ in range(size)]
+
+    class _StrategiesNamespace:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            return _SampledFrom(seq)
+
+        @staticmethod
+        def tuples(*members) -> _Strategy:
+            return _Tuples(*members)
+
+        @staticmethod
+        def lists(elem, min_size: int = 0, max_size: int = 10) -> _Strategy:
+            return _Lists(elem, min_size=min_size, max_size=max_size)
+
+    st = _StrategiesNamespace()
+
+    def settings(*_args, **_kwargs):
+        """Accepted for source compatibility; the fallback runs a fixed
+        number of deterministic examples regardless."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # Positional strategies fill the *trailing* params (hypothesis
+            # semantics), so resolve them to names up front and pass every
+            # draw by keyword — fixtures bound to leading params stay intact.
+            params = list(inspect.signature(fn).parameters.values())
+            if arg_strategies:
+                pos_names = [p.name for p in params[-len(arg_strategies):]]
+                params = params[: -len(arg_strategies)]
+            else:
+                pos_names = []
+            params = [p for p in params if p.name not in kw_strategies]
+            strategies = dict(zip(pos_names, arg_strategies)) | kw_strategies
+
+            @functools.wraps(fn)
+            def wrapper(*call_args, **call_kwargs):
+                rnd = random.Random(fn.__qualname__)
+                for i in range(FALLBACK_EXAMPLES):
+                    draws = {k: s.example(rnd, i) for k, s in strategies.items()}
+                    fn(*call_args, **call_kwargs, **draws)
+
+            # Hide the strategy-supplied parameters from pytest's fixture
+            # resolution (hypothesis does the same).
+            wrapper.__signature__ = inspect.Signature(params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core.autoswap import AutoSwapPlanner
 from repro.core.events import IterationTrace, VariableInfo

@@ -1,0 +1,233 @@
+"""repro.plan: MemoryProgram IR, pass pipeline, registry, artifact cache.
+
+Covers the tentpole invariants: canonical byte-identical round trips of a
+solved program, no-overlap placement driven through PoolPlacement, registry
+dispatch, the RecordingDevice front-end, and the cross-process contract (a
+plan solved in one process reloads from the artifact cache in a second
+process without re-running the trace)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.events import IterationTrace, VariableInfo
+from repro.core.planner import MemoryPlanner
+from repro.core.simulator import HardwareSpec
+from repro.core.trace import RecordingDevice
+from repro.plan import (
+    IterationDetect,
+    MemoryProgram,
+    OffloadLowering,
+    PassContext,
+    Pipeline,
+    PlanCache,
+    PlanCacheMiss,
+    PlanKey,
+    PoolPlacement,
+    SwapSelection,
+    TimingAssign,
+    TraceCapture,
+    dumps_canonical,
+    pool_names,
+    program_from_json,
+    program_to_json,
+    scorer_names,
+    swap_key,
+)
+
+HW = HardwareSpec("test", peak_flops=1e12, hbm_bw=1e12, link_bw=1e10, efficiency=1.0)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def make_trace(intervals):
+    """intervals: list of (size, alloc, free); one access at alloc, one before free."""
+    vs = [
+        VariableInfo(i, s, a, f, accesses=[a, max(a, f - 1)], access_is_write=[True, False])
+        for i, (s, a, f) in enumerate(intervals)
+    ]
+    end = max(f for _, _, f in intervals)
+    tr = IterationTrace(vs, end)
+    tr.op_costs = {i: (1e9, 1e6) for i in range(end)}
+    return tr
+
+
+def solved_program(key=None):
+    tr = make_trace([
+        (4 << 20, 0, 3), (2 << 20, 1, 6), (8 << 20, 2, 9),
+        (1 << 20, 4, 8), (4 << 20, 5, 10), (2 << 20, 7, 10),
+    ])
+    ctx = PassContext(hw=HW, size_threshold=1 << 20)
+    prog = Pipeline([
+        TimingAssign(),
+        PoolPlacement(("best_fit", "first_fit", "cnmem", "exact")),
+        SwapSelection(limit=int(tr.peak_load() * 0.8), scorer="swdoa"),
+        OffloadLowering(limit=int(tr.peak_load() * 0.8)),
+    ]).run(MemoryProgram.from_trace(tr, key), ctx)
+    return prog
+
+
+# ------------------------------------------------------------- round trips
+def test_round_trip_is_byte_identical():
+    prog = solved_program(PlanKey("synthetic", "unit", HW.name))
+    blob = dumps_canonical(prog)
+    restored = program_from_json(json.loads(blob))
+    assert dumps_canonical(restored) == blob
+
+
+def test_round_trip_preserves_lookup_and_schedule():
+    prog = solved_program()
+    restored = program_from_json(program_to_json(prog))
+    for method in ("best_fit", "first_fit"):
+        assert restored.pool_plans[method].lookup == prog.pool_plans[method].lookup
+        assert restored.pool_plans[method].offsets == prog.pool_plans[method].offsets
+    k = next(iter(prog.swap_summaries))
+    assert restored.swap_summaries[k].decisions == prog.swap_summaries[k].decisions
+    assert restored.swap_summaries[k].overhead == prog.swap_summaries[k].overhead
+    assert restored.offload_plans == prog.offload_plans or (
+        restored.offload_plans[k].offload_names == prog.offload_plans[k].offload_names
+    )
+
+
+# ------------------------------------------------- placement via the pipeline
+def assert_no_overlap(trace, plan, alignment=256):
+    align = lambda x: (x + alignment - 1) // alignment * alignment
+    vs = [v for v in trace.variables if v.size > 0]
+    for i in range(len(vs)):
+        for j in range(i + 1, len(vs)):
+            a, b = vs[i], vs[j]
+            if a.overlaps(b):
+                a0, a1 = plan.offsets[a.var], plan.offsets[a.var] + align(a.size)
+                b0, b1 = plan.offsets[b.var], plan.offsets[b.var] + align(b.size)
+                assert a1 <= b0 or b1 <= a0, (a.var, b.var)
+
+
+def test_pool_placement_no_overlap_through_pipeline():
+    """smartpool._place invariant, driven end-to-end through PoolPlacement."""
+    intervals = [
+        (10_000, 0, 5), (2_000, 1, 9), (2_000, 2, 4), (50_000, 3, 6),
+        (2_000, 5, 10), (2_000, 5, 10), (7_000, 0, 10), (300, 6, 8),
+    ]
+    tr = make_trace(intervals)
+    prog = Pipeline([PoolPlacement(("best_fit", "first_fit"))]).run(
+        MemoryProgram.from_trace(tr), PassContext(hw=HW)
+    )
+    for method in ("best_fit", "first_fit"):
+        plan = prog.pool_plans[method]
+        assert_no_overlap(tr, plan)
+        assert plan.footprint >= plan.peak_load
+
+
+def test_registry_exposes_canonical_strategies():
+    assert set(pool_names()) >= {"best_fit", "first_fit", "cnmem", "exact"}
+    assert set(scorer_names()) >= {"doa", "aoa", "wdoa", "swdoa", "bo"}
+
+
+def test_swap_summary_invalidated_on_threshold_change():
+    """A cached schedule solved under one candidate threshold must not be
+    served for a query under another (different candidate sets)."""
+    prog = solved_program()
+    k, s = next(iter(prog.swap_summaries.items()))
+    assert s.size_threshold == 1 << 20
+    prog = Pipeline([SwapSelection(limit=s.limit)]).run(
+        prog, PassContext(hw=HW, size_threshold=1 << 23)
+    )
+    assert prog.swap_summaries[k].size_threshold == 1 << 23
+
+
+def test_passes_are_idempotent():
+    prog = solved_program()
+    before = dumps_canonical(prog)
+    limit = next(iter(prog.swap_summaries.values())).limit
+    again = Pipeline([
+        TimingAssign(),
+        PoolPlacement(("best_fit", "cnmem")),
+        SwapSelection(limit=limit),
+    ]).run(prog, PassContext(hw=HW))
+    assert dumps_canonical(again) == before
+
+
+# --------------------------------------------------- device-event front-end
+def test_device_events_pipeline():
+    """RecordingDevice events -> TraceCapture -> IterationDetect -> pool."""
+    dev = RecordingDevice(min_period=4)
+    for _ in range(3):  # three identical iterations
+        blocks = [dev.malloc(1024 * (i + 1)) for i in range(3)]
+        for b in blocks:
+            dev.exec(None, [b], [b])
+        for b in blocks:
+            dev.free(b)
+    prog = Pipeline([
+        TraceCapture(events=dev.events),
+        IterationDetect(),
+        PoolPlacement(("best_fit",)),
+    ]).run(None, PassContext(hw=HW))
+    assert prog.trace is not None and prog.raw_events is None
+    assert prog.pool_plans["best_fit"].footprint > 0
+
+
+# ------------------------------------------------------------ cache contract
+SOLVE_SNIPPET = """
+import sys, jax, jax.numpy as jnp
+from repro.core.planner import MemoryPlanner
+from repro.plan import PlanCache, PlanKey
+
+def step(w, x):
+    h = jnp.tanh(x @ w)
+    return jnp.sum(h * h)
+
+w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+key = PlanKey("toy", "train:b32", "tpu_v5e")
+p = MemoryPlanner(step, w, x, size_threshold=1, cache=PlanCache(sys.argv[1]), key=key)
+rep = p.report()
+sw = p.swap_report(int(p.swap.peak_load * 0.9))
+print("SOLVED", rep.peak_load, rep.smartpool_footprint, sw.limit, sw.num_selected)
+"""
+
+RELOAD_SNIPPET = """
+import sys
+from repro.core.planner import MemoryPlanner
+from repro.plan import PlanCache, PlanKey
+
+key = PlanKey("toy", "train:b32", "tpu_v5e")
+# step_fn=None: reloading must NOT re-run the trace (it cannot).
+# size_threshold must match the solve; a mismatch invalidates swap summaries.
+p = MemoryPlanner(None, cache=PlanCache(sys.argv[1]), key=key, size_threshold=1)
+assert p.from_cache
+rep = p.report()
+limit = next(iter(p.program.swap_summaries.values())).limit
+sw = p.swap_report(limit)
+print("RELOADED", rep.peak_load, rep.smartpool_footprint, sw.limit, sw.num_selected)
+"""
+
+
+def _run(snippet: str, cache_dir: str) -> str:
+    out = subprocess.run(
+        [sys.executable, "-c", snippet, cache_dir],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert out.returncode == 0, out.stderr
+    return out.stdout.strip().splitlines()[-1]
+
+
+def test_plan_solved_in_one_process_reloads_in_another(tmp_path):
+    cache_dir = str(tmp_path / "plans")
+    solved = _run(SOLVE_SNIPPET, cache_dir)
+    reloaded = _run(RELOAD_SNIPPET, cache_dir)
+    assert solved.split()[1:] == reloaded.split()[1:]
+    assert len(list((tmp_path / "plans").glob("*.json"))) == 1
+
+
+def test_cache_miss_without_step_fn_raises(tmp_path):
+    with pytest.raises(PlanCacheMiss):
+        MemoryPlanner(None, cache=PlanCache(tmp_path), key=PlanKey("a", "b", "c"))
+
+
+def test_cache_requires_key(tmp_path):
+    with pytest.raises(ValueError):
+        MemoryPlanner(lambda x: x, cache=PlanCache(tmp_path))

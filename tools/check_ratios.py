@@ -1,0 +1,70 @@
+"""CI regression gate for the paper's chi/omega competitive ratios.
+
+Runs the SmartPool Table-I benchmark on a tiny trace (vgg11 @ batch 4 —
+seconds, not minutes) and compares the SmartPool and CnMem competitive
+ratios against tools/ci_baseline.json.  Any regression beyond 1% relative
+fails the build; improvements are reported and tolerated.
+
+    PYTHONPATH=src python -m tools.check_ratios            # check
+    PYTHONPATH=src python -m tools.check_ratios --write    # refresh baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).resolve().parent / "ci_baseline.json"
+TOLERANCE = 0.01  # 1% relative regression budget
+MODELS = ("vgg11",)
+BATCH = 4
+
+
+def measure() -> dict:
+    from benchmarks.bench_smartpool import run
+
+    out = {}
+    for name, _us, derived in run(batch=BATCH, models=MODELS):
+        fields = dict(kv.split("=", 1) for kv in derived.split("|"))
+        out[name] = {
+            "smartpool_ratio": float(fields["smartpool_ratio"]),
+            "cnmem_ratio": float(fields["cnmem_ratio"]),
+        }
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true", help="refresh the baseline file")
+    args = ap.parse_args(argv)
+
+    current = measure()
+    if args.write:
+        BASELINE.write_text(json.dumps(current, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {BASELINE}")
+        return 0
+
+    baseline = json.loads(BASELINE.read_text())
+    failures = []
+    for name, ratios in baseline.items():
+        if name not in current:
+            failures.append(f"{name}: missing from current run")
+            continue
+        for metric, base in ratios.items():
+            now = current[name][metric]
+            # Ratios are >= 1.0 by construction; larger is worse.
+            if now > base * (1 + TOLERANCE):
+                failures.append(f"{name}.{metric}: {now:.4f} vs baseline {base:.4f} (>{TOLERANCE:.0%} regression)")
+            else:
+                delta = (now - base) / base
+                print(f"ok {name}.{metric}: {now:.4f} (baseline {base:.4f}, {delta:+.2%})")
+    if failures:
+        print("\n".join("FAIL " + f for f in failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a smoke benchmark with a competitive-ratio
+# regression gate (fails on >1% chi/omega regression vs tools/ci_baseline.json).
+# All stages run even when an earlier one fails, so a red tier-1 can't mask
+# a ratio regression (or vice versa); the exit code aggregates the stages.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+status=0
+
+echo "== tier-1 tests =="
+python -m pytest -x -q || { echo "FAIL tier-1"; status=1; }
+
+echo "== smoke benchmark: SmartPool on a tiny trace =="
+python -m benchmarks.bench_smartpool --models vgg11 --batch 4 || { echo "FAIL smoke bench"; status=1; }
+
+echo "== chi/omega competitive-ratio regression gate =="
+python -m tools.check_ratios || { echo "FAIL ratio gate"; status=1; }
+
+[ "$status" -eq 0 ] && echo "CI OK" || echo "CI FAILED"
+exit "$status"
