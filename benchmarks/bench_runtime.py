@@ -1,0 +1,160 @@
+"""Runtime benchmark: DMA channel scaling + multi-tenant colocation.
+
+Two experiments over the ``repro.runtime`` engine, on CNN training traces
+(the paper's workloads, deterministic simulated time):
+
+  * **channel scaling** — one tenant, its AutoSwap schedule simulated over
+    K = 1, 2, 4 DMA channels at several HBM limits.  K=1 serializes swap-out
+    and swap-in onto one channel (the overlap-free worst case); K=2 is the
+    paper's one-out/one-in configuration.  Acceptance: K=2 strictly reduces
+    simulated overhead vs K=1 on at least one arch, and never increases it.
+
+  * **colocation** — two tenants co-scheduled under one shared budget set to
+    ``--budget-frac`` of their summed natural peaks.  Acceptance: aggregate
+    peak HBM stays below the sum of the tenants' isolated peaks (static
+    per-tenant provisioning) with bounded per-tenant overhead.
+
+Writes a machine-readable ``BENCH_runtime.json`` (``--out``) so future PRs
+have a perf trajectory to regress against; exits non-zero when an acceptance
+flag fails, which is how ``tools/ci.sh`` gates it.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_runtime [--smoke] [--out BENCH_runtime.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.common import cnn_trace
+from repro.core.autoswap import AutoSwapPlanner
+from repro.core.simulator import GTX_1080TI
+from repro.plan import MemoryProgram, PlanKey
+from repro.runtime import colocate_programs, simulate_program
+
+CHANNEL_FRACS = (0.5, 0.6, 0.7, 0.8)
+CHANNEL_KS = (1, 2, 4)
+
+
+def bench_channel_scaling(arch: str, batch: int, threshold: int) -> dict:
+    hw = GTX_1080TI
+    tr = cnn_trace(arch, batch)
+    pl = AutoSwapPlanner(tr, hw, size_threshold=threshold)
+    rows = []
+    for frac in CHANNEL_FRACS:
+        limit = int(pl.peak_load * frac)
+        dec = pl.select(limit, "swdoa")
+        overheads = {
+            f"k{k}": simulate_program(tr, dec, hw, limit, channels=k).overhead
+            for k in CHANNEL_KS
+        }
+        rows.append({
+            "limit_frac": frac,
+            "limit_bytes": limit,
+            "num_decisions": len(dec),
+            **overheads,
+        })
+    strict = any(r["k1"] > r["k2"] + 1e-12 for r in rows)
+    never_worse = all(r["k2"] <= r["k1"] + 1e-12 for r in rows)
+    return {
+        "arch": arch,
+        "batch": batch,
+        "peak_load": pl.peak_load,
+        "rows": rows,
+        "k2_strictly_better_somewhere": strict,
+        "k2_never_worse": never_worse,
+    }
+
+
+def bench_colocation(archs: tuple[str, str], batch: int, threshold: int,
+                     budget_frac: float, channels: int) -> dict:
+    hw = GTX_1080TI
+    programs = {}
+    for arch in archs:
+        trace = cnn_trace(arch, batch)
+        key = PlanKey(arch, f"train:b{batch}", hw.name)
+        programs[arch] = MemoryProgram.from_trace(trace, key)
+    result = colocate_programs(
+        programs, hw, budget_frac=budget_frac, channels=channels,
+        size_threshold=threshold,
+    )
+    d = result.as_dict()
+    # Gate on the *isolated* (swapped, per-share) peaks, not the natural
+    # peaks: budget = frac * sum_natural makes the latter true by
+    # construction, while this one can genuinely regress.  And the sharing
+    # claim only means anything if the tenants actually ran concurrently —
+    # a queued (serialized) run has a low aggregate peak for free.
+    tenants = result.report.tenants
+    concurrent = (
+        all(t.status == "completed" and t.queue_wait_s == 0.0 for t in tenants)
+        and min(t.finished_at for t in tenants) > max(t.admitted_at for t in tenants)
+    )
+    d["tenants_ran_concurrently"] = concurrent
+    d["aggregate_below_sum_isolated"] = (
+        concurrent and d["aggregate_peak"] < d["sum_isolated_peaks"]
+    )
+    d["tenant_overheads"] = {
+        t["name"]: t["overhead"] for t in d["runtime"]["tenants"]
+    }
+    return d
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small models/batch for CI (still exercises both experiments)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--budget-frac", type=float, default=0.8)
+    ap.add_argument("--channels", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_runtime.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        archs, batch, threshold = ("vgg11", "resnet18"), args.batch or 16, 1 << 18
+    else:
+        archs, batch, threshold = ("vgg16", "resnet50"), args.batch or 100, 1 << 20
+
+    channel_scaling = [bench_channel_scaling(a, batch, threshold) for a in archs]
+    colocate = bench_colocation(archs, batch, threshold, args.budget_frac, args.channels)
+
+    ok_channels = (
+        any(r["k2_strictly_better_somewhere"] for r in channel_scaling)
+        and all(r["k2_never_worse"] for r in channel_scaling)
+    )
+    ok_colocate = colocate["aggregate_below_sum_isolated"]
+    report = {
+        "mode": "smoke" if args.smoke else "full",
+        "hardware": GTX_1080TI.name,
+        "batch": batch,
+        "channel_scaling": channel_scaling,
+        "colocate": colocate,
+        "acceptance": {
+            "k2_reduces_overhead": ok_channels,
+            "colocate_below_sum_of_isolated_peaks": ok_colocate,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    for r in channel_scaling:
+        best = min(r["rows"], key=lambda row: row["k2"] - row["k1"])
+        print(
+            f"{r['arch']:>9} b{batch}: peak {r['peak_load']/2**20:7.1f}MiB  "
+            f"best K1->K2 gain @{best['limit_frac']:.1f} limit: "
+            f"{best['k1']*100:6.2f}% -> {best['k2']*100:6.2f}% "
+            f"(K4 {best['k4']*100:6.2f}%)"
+        )
+    print(
+        f"colocate {'+'.join(archs)}: aggregate {colocate['aggregate_peak']/2**20:.1f}MiB "
+        f"vs {colocate['sum_natural_peaks']/2**20:.1f}MiB isolated provisioning "
+        f"(gain {colocate['sharing_gain']*100:.1f}%), overheads "
+        + ", ".join(f"{n}={o*100:.2f}%" for n, o in colocate["tenant_overheads"].items())
+    )
+    print(f"wrote {args.out}; acceptance: {report['acceptance']}")
+    return 0 if (ok_channels and ok_colocate) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -124,134 +124,14 @@ def simulate_swap_schedule(
     hw: HardwareSpec,
     limit: int | None = None,
 ) -> SimResult:
-    """Replay one iteration under a swap schedule (see module docstring)."""
-    if trace.op_times is None:
-        assign_times(trace, hw)
-    times = trace.op_times
-    baseline = times[-1]
-    costs = trace.op_costs or {}
+    """Replay one iteration under a swap schedule (see module docstring).
 
-    # Per-op duration from the timing model.
-    def op_dur(i: int) -> float:
-        flops, nbytes = costs.get(i, (0.0, 0.0))
-        if flops or nbytes:
-            return max(flops / hw.eff_flops, nbytes / hw.hbm_bw) + hw.op_overhead_s
-        return 0.0
+    The event loop itself lives in ``repro.runtime.engine`` since the
+    multi-tenant runtime landed: this is a 1-tenant run over 2 DMA channels
+    (one out + one in — exactly the paper's two serialized streams).  Wider
+    or narrower DMA engines, and multiple tenants sharing one budget, go
+    through ``repro.runtime`` directly.
+    """
+    from ..runtime.engine import simulate_program  # deferred: runtime imports core
 
-    out_at: dict[int, list[SwapDecision]] = {}
-    in_at: dict[int, list[SwapDecision]] = {}
-    for d in decisions:
-        out_at.setdefault(d.out_after, []).append(d)
-        in_at.setdefault(d.in_before, []).append(d)
-
-    # Load deltas per index from lifetimes.
-    delta = [0] * (trace.num_indices + 1)
-    malloc_size_at: dict[int, int] = {}
-    for v in trace.variables:
-        delta[v.alloc_index] += v.size
-        malloc_size_at[v.alloc_index] = v.size
-        if v.free_index <= trace.num_indices:
-            delta[v.free_index] -= v.size
-
-    transfer = lambda size: size / hw.link_bw
-
-    t = 0.0
-    resident = 0
-    peak_resident = 0
-    out_stream_free = 0.0
-    in_stream_free = 0.0
-    out_done: dict[int, float] = {}     # var -> completion time of swap-out
-    in_done: dict[int, float] = {}      # var -> completion time of swap-in
-    pending_outs: list[tuple[float, int, int]] = []  # (complete_t, var, size)
-    stalls = 0
-    delayed = 0
-    res = SimResult(baseline_s=baseline, duration_s=0.0, peak_resident=0)
-
-    # Wrap-around decisions: in steady state the variable is already on the
-    # host when the iteration starts (swapped out during the previous tail).
-    for d in decisions:
-        if d.wraps:
-            resident -= d.size
-            out_done[d.var] = 0.0
-
-    for i in range(trace.num_indices):
-        # 1. If this op needs a swapped variable back, wait for its swap-in.
-        for d in in_at.get(i, ()):  # prefetch deadline == this access
-            if d.var not in in_done:
-                # Should have been scheduled; schedule now (late prefetch).
-                start = max(t, in_stream_free, out_done.get(d.var, 0.0))
-                end = start + transfer(d.size)
-                in_stream_free = end
-                in_done[d.var] = end
-                resident += d.size
-                res.in_events.append((d.var, start, end))
-            if in_done[d.var] > t:
-                stalls += 1
-                t = in_done[d.var]
-
-        # 2. Memory-limit enforcement on mallocs (paper: delay the Malloc).
-        if limit is not None and delta[i] > 0 and i in malloc_size_at:
-            while resident + delta[i] > limit and pending_outs:
-                # Advance to the next swap-out completion.
-                pending_outs.sort()
-                done_t, var, size = pending_outs.pop(0)
-                if done_t > t:
-                    delayed += 1
-                    t = done_t
-                resident -= size
-        resident += delta[i]
-        peak_resident = max(peak_resident, resident)
-
-        # 3. Execute the op.
-        t += op_dur(i)
-
-        # 4. Launch swap-outs whose trigger access just completed.
-        for d in out_at.get(i, ()):
-            start = max(t, out_stream_free)
-            end = start + transfer(d.size)
-            out_stream_free = end
-            out_done[d.var] = end
-            pending_outs.append((end, d.var, d.size))
-            res.out_events.append((d.var, start, end))
-
-        # 5. Retire completed swap-outs (frees resident bytes).
-        still = []
-        for done_t, var, size in pending_outs:
-            if done_t <= t:
-                resident -= size
-            else:
-                still.append((done_t, var, size))
-        pending_outs = still
-
-        # 6. Prefetch: keep the in-stream busy with the nearest-deadline
-        # swapped-out variable once its data is out and the limit allows it
-        # back (paper: "starts swap-in in advance so the access is not
-        # delayed"; swap-ins are strictly deadline-ordered, so a limit-blocked
-        # head-of-line transfer blocks the stream until a free makes room).
-        upcoming = sorted(
-            (d for d in decisions
-             if d.var in out_done and d.var not in in_done and d.in_before > i),
-            key=lambda d: d.in_before,
-        )
-        for d in upcoming:
-            need = transfer(d.size)
-            if limit is not None and resident + d.size > limit:
-                break  # no room yet; retry at the next op boundary
-            start = max(t, in_stream_free, out_done[d.var])
-            end = start + need
-            in_stream_free = end
-            in_done[d.var] = end
-            resident += d.size
-            peak_resident = max(peak_resident, resident)
-            res.in_events.append((d.var, start, end))
-
-    # Iteration ends at compute end.  A tail of in-flight swap-outs (wrap
-    # decisions: weights/optimizer state leaving after their last access)
-    # overlaps the next iteration's head in steady state and is not charged;
-    # it is recorded as `tail_spill_s` for visibility.
-    res.duration_s = t
-    res.tail_spill_s = max(0.0, out_stream_free - t)
-    res.peak_resident = peak_resident
-    res.stalls = stalls
-    res.delayed_mallocs = delayed
-    return res
+    return simulate_program(trace, decisions, hw, limit, channels=2, prefetch="eager")

@@ -1,0 +1,193 @@
+"""Multi-tenant colocation driver: N workloads, one device, one HBM budget.
+
+Admits several tenant steps — e.g. a prefill worker, a decode worker and a
+training job — to the ``repro.runtime`` memory runtime: each tenant's plan
+is solved (or restored from ``--plan-cache``) through the ``repro.plan``
+pipeline, given a proportional share of the shared budget as its AutoSwap
+limit, and the tenants are co-scheduled over ``--channels`` DMA channels.
+
+Tenant specs are ``role`` or ``arch:role`` with roles ``train``, ``prefill``
+and ``decode``; plan-cache keys match the train/serve launchers exactly, so
+a plan solved by ``python -m repro.launch.serve --plan-cache DIR`` warm-starts
+colocation in this process and vice versa.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.colocate --arch qwen3-4b --smoke \\
+      --tenants prefill,decode --budget-frac 0.8 --channels 2 \\
+      [--plan-cache /tmp/plans] [--json colocate.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.core.planner import MemoryPlanner
+from repro.core.simulator import TPU_V5E
+from repro.models import build_model
+from repro.plan import PlanCache, PlanKey
+from repro.runtime import ColocationResult, colocate_programs
+
+SIZE_THRESHOLD = 1 << 18  # match serve.py: smoke models are far below 1 MiB
+
+
+def _parse_tenants(spec: str, default_arch: str) -> list[tuple[str, str]]:
+    out = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        arch, _, role = item.rpartition(":")
+        out.append((arch or default_arch, role))
+    if not out:
+        raise SystemExit("--tenants needs at least one role")
+    for arch, role in out:
+        if role not in ("train", "prefill", "decode"):
+            raise SystemExit(f"unknown tenant role {role!r} (train|prefill|decode)")
+    return out
+
+
+def build_tenant_program(arch: str, role: str, args, cache: PlanCache | None) -> MemoryPlanner:
+    """Trace/restore one tenant step as a MemoryProgram behind a planner.
+
+    Step signatures are byte-identical to the train/serve launchers so all
+    three share one artifact per (arch, step, hardware).
+    """
+    import jax.numpy as jnp
+
+    from repro.launch.serve import serve_batch_struct
+
+    cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
+    model = build_model(cfg)
+    smoke = ":smoke" if args.smoke else ""
+    pshapes = model.init_shapes()
+
+    if role == "train":
+        from repro.launch.train import make_batch_fn
+
+        batch_fn = make_batch_fn(cfg, args.batch, args.seq, args.seed)
+        probe = jax.eval_shape(lambda: batch_fn(0))
+
+        def step_probe(params, batch):
+            return model.loss(params, batch)[0]
+
+        key = PlanKey(arch, f"train:b{args.batch}s{args.seq}{smoke}", TPU_V5E.name)
+        return MemoryPlanner(
+            step_probe, pshapes, probe, hw=TPU_V5E, cache=cache, key=key,
+            size_threshold=SIZE_THRESHOLD,
+        )
+
+    B, P = args.batch, args.prompt_len
+    max_seq = P + args.gen + (cfg.num_patch_tokens if cfg.frontend == "vision_stub" else 0)
+    batch = serve_batch_struct(cfg, B, P)
+
+    def prefill_fn(params, b):
+        return model.prefill(params, b, max_seq=max_seq)
+
+    if role == "prefill":
+        fn, fargs = prefill_fn, (pshapes, batch)
+    else:
+        _, cache_struct = jax.eval_shape(prefill_fn, pshapes, batch)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn, fargs = model.decode_step, (pshapes, cache_struct, tok, pos)
+    key = PlanKey(arch, f"{role}:b{B}p{P}s{max_seq}{smoke}", TPU_V5E.name)
+    return MemoryPlanner(
+        fn, *fargs, hw=TPU_V5E, cache=cache, key=key, size_threshold=SIZE_THRESHOLD
+    )
+
+
+def print_colocation(result: ColocationResult) -> None:
+    rep = result.report
+    print(
+        f"[runtime] budget {result.budget/2**20:.1f}MiB over {rep.channels} DMA "
+        f"channels on {rep.hardware}; makespan {rep.makespan_s*1000:.2f}ms"
+    )
+    for t in rep.tenants:
+        if t.status != "completed":
+            print(f"[runtime]   {t.name}: {t.status} (floor {t.floor/2**20:.1f}MiB)")
+            continue
+        iso = result.isolated.get(t.name)
+        iso_oh = f" (isolated {iso.overhead*100:.2f}%)" if iso else ""
+        print(
+            f"[runtime]   {t.name}: overhead {t.overhead*100:.2f}%{iso_oh}  "
+            f"peak {t.peak_resident/2**20:.1f}MiB  stalls {t.stalls}  "
+            f"delayed mallocs {t.delayed_mallocs}  "
+            f"queue wait {t.queue_wait_s*1000:.2f}ms"
+        )
+    print(
+        f"[runtime] aggregate peak {rep.aggregate_peak/2**20:.1f}MiB vs "
+        f"{result.sum_natural_peaks/2**20:.1f}MiB summed isolated provisioning "
+        f"(sharing gain {result.sharing_gain*100:.1f}%); "
+        f"over-budget events {rep.overflow_events}"
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tenants", default="prefill,decode",
+                    help="comma list of role or arch:role (train|prefill|decode)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128, help="train tenant sequence length")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--channels", type=int, default=2, help="DMA channels shared by all tenants")
+    ap.add_argument("--budget-frac", type=float, default=0.8,
+                    help="shared HBM budget as a fraction of summed tenant peaks")
+    ap.add_argument("--budget-gb", type=float, default=None,
+                    help="absolute shared HBM budget (overrides --budget-frac)")
+    ap.add_argument("--scorer", default="swdoa")
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan artifact directory shared with the train/serve launchers")
+    ap.add_argument("--cache-max-mb", type=float, default=None,
+                    help="LRU size bound for --plan-cache")
+    ap.add_argument("--json", default=None, help="write the machine-readable report here")
+    args = ap.parse_args(argv)
+
+    cache = None
+    if args.plan_cache:
+        max_bytes = int(args.cache_max_mb * 2**20) if args.cache_max_mb else None
+        cache = PlanCache(args.plan_cache, max_bytes=max_bytes)
+
+    programs = {}
+    planners: dict[tuple[str, str], MemoryPlanner] = {}
+    for arch, role in _parse_tenants(args.tenants, args.arch):
+        # Duplicate specs are distinct tenants (two decode workers on one
+        # device) sharing one solved program — trace once, admit N times.
+        if (arch, role) not in planners:
+            planners[(arch, role)] = build_tenant_program(arch, role, args, cache)
+        planner = planners[(arch, role)]
+        name = f"{arch}:{role}"
+        k = 0
+        while name in programs:
+            k += 1
+            name = f"{arch}:{role}#{k}"
+        src = "restored from cache" if planner.from_cache else "solved"
+        print(f"[plan] {name}: {src}  peak={planner.trace.peak_load()/2**20:.1f}MiB")
+        programs[name] = planner.program
+
+    result = colocate_programs(
+        programs, TPU_V5E,
+        budget_frac=args.budget_frac,
+        budget=int(args.budget_gb * 2**30) if args.budget_gb else None,
+        channels=args.channels,
+        scorer=args.scorer,
+        size_threshold=SIZE_THRESHOLD,
+        cache=cache,
+    )
+    print_colocation(result)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result.as_dict(), f, indent=2, sort_keys=True)
+        print(f"[runtime] wrote {args.json}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

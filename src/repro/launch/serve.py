@@ -44,7 +44,7 @@ def serve_batch_struct(cfg, B: int, P: int) -> dict:
     return batch
 
 
-def plan_serve_steps(model, cfg, args, max_seq: int):
+def plan_serve_steps(model, cfg, args, max_seq: int, plan_cache=None):
     """Solve (or restore) the memory plans for the prefill and decode steps.
 
     Returns {role: (planner, PoolReport)} for "prefill" and "decode".
@@ -53,7 +53,8 @@ def plan_serve_steps(model, cfg, args, max_seq: int):
     from repro.core.simulator import TPU_V5E
     from repro.plan import PlanCache, PlanKey
 
-    plan_cache = PlanCache(args.plan_cache) if args.plan_cache else None
+    if plan_cache is None and args.plan_cache:
+        plan_cache = PlanCache(args.plan_cache)
     B, P = args.batch, args.prompt_len
     pshapes = model.init_shapes()
     batch = serve_batch_struct(cfg, B, P)
@@ -107,6 +108,14 @@ def main(argv=None):
     ap.add_argument("--plan-cache", default=None,
                     help="directory of solved plan artifacts shared across "
                          "prefill/decode processes (solve once, reload after)")
+    ap.add_argument("--colocate", action="store_true",
+                    help="co-schedule the prefill and decode steps as two "
+                         "tenants of the shared-HBM memory runtime and print "
+                         "the per-tenant overhead / aggregate peak report")
+    ap.add_argument("--colocate-budget-frac", type=float, default=0.8,
+                    help="shared budget as a fraction of summed step peaks")
+    ap.add_argument("--channels", type=int, default=2,
+                    help="DMA channels for the --colocate runtime")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -116,8 +125,31 @@ def main(argv=None):
     B, P = args.batch, args.prompt_len
     max_seq = P + args.gen + (cfg.num_patch_tokens if cfg.frontend == "vision_stub" else 0)
 
-    if args.plan or args.plan_cache:
-        plan_serve_steps(model, cfg, args, max_seq)
+    if args.plan or args.plan_cache or args.colocate:
+        from repro.plan import PlanCache
+
+        plan_cache = PlanCache(args.plan_cache) if args.plan_cache else None
+        planned = plan_serve_steps(model, cfg, args, max_seq, plan_cache=plan_cache)
+        if args.colocate:
+            # The serving colocation case: prefill + decode as two tenants of
+            # one shared HBM budget (TENSILE's regime), driven by the same
+            # solved programs the planner just produced/restored.
+            from repro.core.simulator import TPU_V5E
+            from repro.launch.colocate import print_colocation
+            from repro.runtime import colocate_programs
+
+            programs = {
+                f"{args.arch}:{role}": planner.program
+                for role, (planner, _rep) in planned.items()
+            }
+            result = colocate_programs(
+                programs, TPU_V5E,
+                budget_frac=args.colocate_budget_frac,
+                channels=args.channels,
+                size_threshold=1 << 18,
+                cache=plan_cache,
+            )
+            print_colocation(result)
     key = jax.random.PRNGKey(args.seed + 1)
     spec = serve_batch_struct(cfg, B, P)
     batch = {"tokens": jax.random.randint(key, spec["tokens"].shape, 0, cfg.vocab_size, jnp.int32)}

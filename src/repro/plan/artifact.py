@@ -192,11 +192,21 @@ def dumps_canonical(program: MemoryProgram) -> str:
 
 
 class PlanCache:
-    """Directory of solved-plan artifacts, one JSON file per PlanKey."""
+    """Directory of solved-plan artifacts, one JSON file per PlanKey.
 
-    def __init__(self, root: "str | Path"):
+    ``max_bytes`` bounds the cache for long-lived serving fleets with many
+    tenant models: after each store, least-recently-used artifacts (by file
+    mtime — a hit touches the file) are evicted until the directory fits.
+    A schema-version mismatch is an expected upgrade-path event and degrades
+    to a silent cache miss (the caller re-solves and overwrites); corrupt
+    artifacts additionally warn.
+    """
+
+    def __init__(self, root: "str | Path", max_bytes: int | None = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = max_bytes
+        self.version_misses = 0
 
     def path_for(self, key: PlanKey) -> Path:
         return self.root / f"{key.cache_name()}.json"
@@ -207,7 +217,14 @@ class PlanCache:
             return None
         try:
             with path.open() as f:
-                program = program_from_json(json.load(f))
+                payload = json.load(f)
+            if not isinstance(payload, dict):
+                raise ValueError("artifact is not a JSON object")  # corrupt: warn below
+            if payload.get("version") != PLAN_FORMAT_VERSION:
+                # Artifact written by an older/newer schema: a plain miss.
+                self.version_misses += 1
+                return None
+            program = program_from_json(payload)
         except (OSError, json.JSONDecodeError, KeyError, TypeError, ValueError) as e:
             # A corrupt/stale artifact is a cache miss, not a crash: the
             # caller re-solves and overwrites it.
@@ -217,6 +234,11 @@ class PlanCache:
             return None
         program.key = key
         program.from_cache = True
+        # LRU touch: a hit keeps the artifact at the back of the evict queue.
+        try:
+            os.utime(path)
+        except OSError:
+            pass
         return program
 
     def store(self, program: MemoryProgram) -> Path:
@@ -235,7 +257,39 @@ class PlanCache:
             if os.path.exists(tmp):
                 os.unlink(tmp)
             raise
+        self._evict(keep=path)
         return path
+
+    def _evict(self, keep: Path | None = None) -> list[Path]:
+        """Drop least-recently-used artifacts until the directory fits
+        ``max_bytes``.  The just-written artifact is never evicted, so one
+        oversized plan degrades to a one-entry cache rather than none."""
+        if self.max_bytes is None:
+            return []
+        entries = []
+        for p in self.root.glob("*.json"):
+            try:
+                st = p.stat()
+            except OSError:
+                continue
+            entries.append((st.st_mtime, st.st_size, p))
+        total = sum(size for _, size, _ in entries)
+        evicted: list[Path] = []
+        for _, size, p in sorted(entries):
+            if total <= self.max_bytes:
+                break
+            if keep is not None and p == keep:
+                continue
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            total -= size
+            evicted.append(p)
+        return evicted
+
+    def total_bytes(self) -> int:
+        return sum(p.stat().st_size for p in self.root.glob("*.json"))
 
     def keys(self) -> list[str]:
         return sorted(p.stem for p in self.root.glob("*.json"))

@@ -1,0 +1,38 @@
+"""repro.runtime: the execution layer on top of the repro.plan IR.
+
+  engine   — ChannelPool (K DMA channels), PoolAccountant (shared budget),
+             Tenant, MemoryRuntime (N-tenant discrete-event co-scheduler),
+             simulate_program (the paper's simulator as a 1-tenant run)
+  tenants  — tenant_from_program / colocate_programs: plan-pipeline +
+             PlanCache warm-start into the runtime
+
+``core.simulator.simulate_swap_schedule`` is now a thin 1-tenant/2-channel
+call into this engine; ``python -m repro.launch.colocate`` drives it from
+the command line and ``benchmarks/bench_runtime.py`` measures it.
+"""
+
+from .engine import (
+    ChannelPool,
+    MemoryRuntime,
+    PoolAccountant,
+    RuntimeReport,
+    Tenant,
+    TenantReport,
+    planned_peak,
+    simulate_program,
+)
+from .tenants import ColocationResult, colocate_programs, tenant_from_program
+
+__all__ = [
+    "ChannelPool",
+    "MemoryRuntime",
+    "PoolAccountant",
+    "RuntimeReport",
+    "Tenant",
+    "TenantReport",
+    "planned_peak",
+    "simulate_program",
+    "ColocationResult",
+    "colocate_programs",
+    "tenant_from_program",
+]

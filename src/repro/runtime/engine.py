@@ -1,0 +1,550 @@
+"""Discrete-event memory runtime: N tenant programs, K DMA channels, one HBM.
+
+This is the execution layer on top of the ``repro.plan`` IR.  The paper's
+simulator (formerly the event loop inside ``core/simulator.py``) replayed ONE
+iteration of ONE program with one serialized swap-out stream and one
+serialized swap-in stream.  This module generalizes that loop along two axes:
+
+* **Channels** — ``ChannelPool`` models K serialized DMA channels,
+  direction-partitioned (K=1: a single shared bidirectional channel; K>=2:
+  ceil(K/2) out + floor(K/2) in).  K=2 reproduces the paper's
+  one-out/one-in streams exactly, which is how
+  ``core.simulator.simulate_swap_schedule`` now delegates here.
+
+* **Tenants** — ``MemoryRuntime`` admits N tenant programs (e.g. a prefill
+  worker, a decode worker and a training job) against one shared HBM budget.
+  Compute is per-tenant (each tenant owns its cores); HBM residency and DMA
+  channels are shared.  Tenants are interleaved in global-time order: at each
+  step the tenant with the smallest local clock executes its next op using
+  the original simulator's per-op semantics (swap-in stall, delayed malloc,
+  swap-out launch, deadline-ordered prefetch).
+
+Shared-pool accounting (``PoolAccountant``) charges swap-in bytes at
+*schedule* time, so the admission guard sees in-flight transfers on every
+channel — with K in-channels two prefetches can no longer both be admitted
+into headroom that only fits one (the double-admission hazard a single
+serialized in-stream never exposed).
+
+Admission control: a tenant whose resident floor (planned peak under its
+swap schedule) does not fit in the unreserved budget is queued FIFO, not
+OOM-killed; it starts when a finishing tenant releases its reservation.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from ..core.events import IterationTrace
+from ..core.simulator import HardwareSpec, SimResult, SwapDecision, assign_times
+
+
+# ----------------------------------------------------------------- channels
+@dataclass
+class ChannelPool:
+    """K serialized DMA channels, direction-partitioned.
+
+    K=1 degrades to a single bidirectional channel (out and in transfers
+    contend); K>=2 splits ceil(K/2) channels for swap-out and the rest for
+    swap-in, each direction load-balanced onto its earliest-free channel.
+    """
+
+    num_channels: int
+    free_at: list[float]
+    out_ids: tuple[int, ...]
+    in_ids: tuple[int, ...]
+
+    @classmethod
+    def make(cls, k: int) -> "ChannelPool":
+        k = max(1, int(k))
+        if k == 1:
+            out_ids = in_ids = (0,)
+        else:
+            split = (k + 1) // 2
+            out_ids = tuple(range(split))
+            in_ids = tuple(range(split, k))
+        return cls(k, [0.0] * k, out_ids, in_ids)
+
+    def acquire(self, direction: str, ready_t: float, duration: float) -> tuple[float, float, int]:
+        """Reserve the earliest-free channel of `direction`; returns (start, end, channel)."""
+        ids = self.out_ids if direction == "out" else self.in_ids
+        ch = min(ids, key=lambda c: self.free_at[c])
+        start = max(ready_t, self.free_at[ch])
+        end = start + duration
+        self.free_at[ch] = end
+        return start, end, ch
+
+    def drain_time(self, direction: str) -> float:
+        ids = self.out_ids if direction == "out" else self.in_ids
+        return max(self.free_at[c] for c in ids)
+
+
+# --------------------------------------------------------------- accounting
+@dataclass
+class PoolAccountant:
+    """Shared-HBM accountant: per-tenant resident bytes against one budget.
+
+    Swap-in bytes are charged when the transfer is *scheduled* (reservation),
+    not when it completes, so ``fits()`` sees in-flight swap-ins on all
+    channels and the engine cannot double-admit into the same headroom.
+    ``overflow_events`` counts forced over-budget charges (late swap-ins at
+    an access deadline, mallocs with no pending swap-out to wait for) — zero
+    on a well-provisioned tenant set.
+    """
+
+    budget: int | None = None
+    resident: dict[str, int] = field(default_factory=dict)
+    peak: dict[str, int] = field(default_factory=dict)
+    total: int = 0
+    aggregate_peak: int = 0
+    overflow_events: int = 0
+
+    def add(self, tenant: str, nbytes: int) -> None:
+        self.resident[tenant] = self.resident.get(tenant, 0) + nbytes
+        self.total += nbytes
+        if nbytes > 0 and self.budget is not None and self.total > self.budget:
+            self.overflow_events += 1
+
+    def fits(self, nbytes: int) -> bool:
+        return self.budget is None or self.total + nbytes <= self.budget
+
+    def mark_peak(self, tenant: str) -> None:
+        r = self.resident.get(tenant, 0)
+        if r > self.peak.get(tenant, 0):
+            self.peak[tenant] = r
+        if self.total > self.aggregate_peak:
+            self.aggregate_peak = self.total
+
+
+# ------------------------------------------------------------------ tenants
+@dataclass
+class Tenant:
+    """One program admitted to the runtime: a trace + its swap schedule.
+
+    ``limit`` is the HBM target the schedule was solved for (used for
+    isolated-baseline comparisons; the shared budget governs execution).
+    ``floor`` is the admission-control reservation — the planned peak
+    resident bytes under the schedule; computed from the trace when None.
+    """
+
+    name: str
+    trace: IterationTrace
+    decisions: list[SwapDecision] = field(default_factory=list)
+    limit: int | None = None
+    floor: int | None = None
+    iterations: int = 1
+
+    def resident_floor(self) -> int:
+        if self.floor is None:
+            self.floor = planned_peak(self.trace, self.decisions)
+        return self.floor
+
+
+def planned_peak(trace: IterationTrace, decisions: Sequence[SwapDecision]) -> int:
+    """Peak of the load curve with the schedule's absence windows subtracted —
+    the minimum HBM a tenant needs resident if every transfer lands on time."""
+    curve = trace.load_curve()
+    n = len(curve)
+    for d in decisions:
+        if d.wraps:
+            spans = (range(0, min(d.in_before, n)), range(min(d.out_after, n), n))
+        else:
+            spans = (range(min(d.out_after, n), min(d.in_before, n)),)
+        for span in spans:
+            for i in span:
+                curve[i] -= d.size
+    return max(curve) if curve else 0
+
+
+@dataclass
+class _PendingOut:
+    done_t: float
+    owner: "_TenantRun"
+    var: int
+    size: int
+
+
+class _TenantRun:
+    """Per-tenant replay state: the original simulator loop, one op at a time,
+    against the shared channel pool / accountant."""
+
+    def __init__(self, tenant: Tenant, hw: HardwareSpec, engine: "MemoryRuntime", admit_t: float):
+        self.tenant = tenant
+        self.name = tenant.name
+        self.hw = hw
+        self.engine = engine
+        trace = tenant.trace
+        if trace.op_times is None:
+            assign_times(trace, hw)
+        self.trace = trace
+        self.costs = trace.op_costs or {}
+        self.baseline_s = trace.op_times[-1]
+        self.decisions = list(tenant.decisions)
+        self.iterations = max(1, tenant.iterations)
+        self.floor = tenant.resident_floor()
+
+        self.out_at: dict[int, list[SwapDecision]] = {}
+        self.in_at: dict[int, list[SwapDecision]] = {}
+        for d in self.decisions:
+            self.out_at.setdefault(d.out_after, []).append(d)
+            self.in_at.setdefault(d.in_before, []).append(d)
+
+        n = trace.num_indices
+        self.delta = [0] * (n + 1)
+        self.malloc_size_at: dict[int, int] = {}
+        for v in trace.variables:
+            self.delta[v.alloc_index] += v.size
+            self.malloc_size_at[v.alloc_index] = v.size
+            if v.free_index <= n:
+                self.delta[v.free_index] -= v.size
+
+        self.bt = trace.op_times  # baseline schedule, for prefetch back-scheduling
+
+        self.admit_t = admit_t
+        self.t = admit_t
+        self.i = 0
+        self.iter_no = 0
+        self.stalls = 0
+        self.delayed = 0
+        self.out_events: list[tuple[int, float, float, int]] = []
+        self.in_events: list[tuple[int, float, float, int]] = []
+        self.in_done: dict[int, float] = {}
+        self.out_done: dict[int, float] = {}
+        self.finished = False
+        self._begin_iteration()
+
+    # ------------------------------------------------------------ plumbing
+    def _transfer(self, size: int) -> float:
+        return size / self.hw.link_bw
+
+    def _op_dur(self, i: int) -> float:
+        flops, nbytes = self.costs.get(i, (0.0, 0.0))
+        if flops or nbytes:
+            return max(flops / self.hw.eff_flops, nbytes / self.hw.hbm_bw) + self.hw.op_overhead_s
+        return 0.0
+
+    def _due(self, d: SwapDecision, i: int, need: float) -> bool:
+        """Back-scheduling: is it time to start this swap-in?
+
+        The transfer is due at the last op boundary where the baseline compute
+        remaining before its deadline access still covers the transfer time —
+        deferring one more op would make it late.  Actual compute only runs
+        slower than baseline (stalls, delayed mallocs), so a transfer started
+        on the baseline schedule never misses an on-time deadline; only
+        channel contention can push it late.
+        """
+        bt = self.bt
+        nxt = min(i + 1, len(bt) - 1)
+        slack = bt[d.in_before] - bt[nxt]
+        return slack - self._op_dur(nxt) < need
+
+    def _begin_iteration(self) -> None:
+        self.in_done = {}
+        self.out_done = {}
+        # Wrap decisions: in steady state the variable is already on the host
+        # when the iteration starts (swapped out during the previous tail).
+        for d in self.decisions:
+            if d.wraps:
+                self.engine.acct.add(self.name, -d.size)
+                self.out_done[d.var] = self.t
+        self.i = 0
+
+    def _end_iteration(self) -> bool:
+        """Close one iteration; True when the whole tenant is finished."""
+        self.iter_no += 1
+        if self.iter_no >= self.iterations:
+            return True
+        # Iteration barrier for multi-iteration replay: drain this tenant's
+        # in-flight transfers and reset its residency to zero so the next
+        # iteration's deltas (which re-count persistent variables at index 0)
+        # don't double-charge the accountant.
+        acct = self.engine.acct
+        for rec in [r for r in self.engine.pending_outs if r.owner is self]:
+            self.t = max(self.t, rec.done_t)
+            self.engine.pending_outs.remove(rec)
+            acct.add(self.name, -rec.size)
+        if self.in_done:
+            self.t = max(self.t, max(self.in_done.values()))
+        acct.add(self.name, -acct.resident.get(self.name, 0))
+        self._begin_iteration()
+        return False
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> bool:
+        """Execute the next op; returns True when the tenant has finished."""
+        if self.i >= self.trace.num_indices:
+            # Degenerate empty trace.
+            self.finished = self._end_iteration()
+            return self.finished
+        i = self.i
+        acct = self.engine.acct
+        chans = self.engine.channels
+
+        # 1. If this op needs a swapped variable back, wait for its swap-in.
+        for d in self.in_at.get(i, ()):
+            if d.var not in self.in_done:
+                # Should have been prefetched; schedule now (late prefetch).
+                # Still charged at schedule time so concurrent channels see it.
+                ready = max(self.t, self.out_done.get(d.var, 0.0))
+                start, end, ch = chans.acquire("in", ready, self._transfer(d.size))
+                self.in_done[d.var] = end
+                acct.add(self.name, d.size)
+                self.in_events.append((d.var, start, end, ch))
+            if self.in_done[d.var] > self.t:
+                self.stalls += 1
+                self.t = self.in_done[d.var]
+
+        # 2. Budget enforcement on mallocs (paper: delay the Malloc).  Any
+        # tenant's pending swap-out frees shared headroom, so the wait is on
+        # the globally earliest completion.
+        if self.engine.budget is not None and self.delta[i] > 0 and i in self.malloc_size_at:
+            while not acct.fits(self.delta[i]) and self.engine.pending_outs:
+                rec = min(self.engine.pending_outs, key=lambda r: r.done_t)
+                self.engine.pending_outs.remove(rec)
+                if rec.done_t > self.t:
+                    self.delayed += 1
+                    self.t = rec.done_t
+                acct.add(rec.owner.name, -rec.size)
+        acct.add(self.name, self.delta[i])
+        acct.mark_peak(self.name)
+
+        # 3. Execute the op (compute is per-tenant; only memory is shared).
+        self.t += self._op_dur(i)
+
+        # 4. Launch swap-outs whose trigger access just completed.
+        for d in self.out_at.get(i, ()):
+            start, end, ch = chans.acquire("out", self.t, self._transfer(d.size))
+            self.out_done[d.var] = end
+            self.engine.pending_outs.append(_PendingOut(end, self, d.var, d.size))
+            self.out_events.append((d.var, start, end, ch))
+
+        # 5. Retire this tenant's completed swap-outs (frees resident bytes).
+        for rec in [r for r in self.engine.pending_outs if r.owner is self and r.done_t <= self.t]:
+            self.engine.pending_outs.remove(rec)
+            acct.add(self.name, -rec.size)
+
+        # 6. Prefetch swapped-out variables back, nearest deadline first.
+        # Policy "eager" (the legacy simulator): keep the in-channels busy as
+        # soon as data is out and the budget allows it back.  Policy
+        # "backsched" (runtime default): start each swap-in just-in-time from
+        # its deadline, so readmitted bytes don't crowd the budget that
+        # compute mallocs need in the meantime — eager prefetch over fast
+        # channels otherwise *increases* malloc delays (scheduling anomaly).
+        # Either way a budget-blocked head-of-line transfer stops this
+        # tenant's prefetching until room appears — and because bytes are
+        # reserved at schedule time in steps 1/6, a second in-channel can
+        # never admit into the same headroom.
+        upcoming = sorted(
+            (d for d in self.decisions
+             if d.var in self.out_done and d.var not in self.in_done and d.in_before > i),
+            key=lambda d: d.in_before,
+        )
+        for d in upcoming:
+            if self.engine.budget is not None and not acct.fits(d.size):
+                break
+            if self.engine.prefetch == "backsched" and not self._due(d, i, self._transfer(d.size)):
+                continue
+            start, end, ch = chans.acquire(
+                "in", max(self.t, self.out_done[d.var]), self._transfer(d.size)
+            )
+            self.in_done[d.var] = end
+            acct.add(self.name, d.size)
+            acct.mark_peak(self.name)
+            self.in_events.append((d.var, start, end, ch))
+
+        self.i += 1
+        if self.i >= self.trace.num_indices:
+            self.finished = self._end_iteration()
+        return self.finished
+
+    def release_residency(self) -> None:
+        """Free everything this tenant still has charged to the accountant.
+
+        Called when the tenant finishes: persistent variables (freed at
+        ``delta[num_indices]``, which the op loop never applies) and any
+        in-flight tail swap-outs would otherwise stay charged to the shared
+        pool forever, starving later-admitted tenants.
+        """
+        acct = self.engine.acct
+        for rec in [r for r in self.engine.pending_outs if r.owner is self]:
+            self.engine.pending_outs.remove(rec)
+            acct.add(self.name, -rec.size)
+        acct.add(self.name, -acct.resident.get(self.name, 0))
+
+    # ------------------------------------------------------------- results
+    def sim_result(self) -> SimResult:
+        res = SimResult(
+            baseline_s=self.baseline_s * self.iterations,
+            duration_s=self.t - self.admit_t,
+            peak_resident=self.engine.acct.peak.get(self.name, 0),
+            stalls=self.stalls,
+            delayed_mallocs=self.delayed,
+            tail_spill_s=max(0.0, self.engine.channels.drain_time("out") - self.t),
+            out_events=[(v, s, e) for v, s, e, _ in self.out_events],
+            in_events=[(v, s, e) for v, s, e, _ in self.in_events],
+        )
+        return res
+
+
+# ------------------------------------------------------------------ reports
+@dataclass
+class TenantReport:
+    name: str
+    status: str                     # "completed" | "unschedulable"
+    baseline_s: float
+    duration_s: float               # compute span, excluding queue wait
+    overhead: float
+    peak_resident: int
+    floor: int
+    stalls: int
+    delayed_mallocs: int
+    admitted_at: float
+    finished_at: float
+    queue_wait_s: float
+
+    def as_dict(self) -> dict:
+        return self.__dict__.copy()
+
+
+@dataclass
+class RuntimeReport:
+    hardware: str
+    budget: int | None
+    channels: int
+    tenants: list[TenantReport]
+    aggregate_peak: int
+    overflow_events: int
+    makespan_s: float
+
+    def tenant(self, name: str) -> TenantReport:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    def as_dict(self) -> dict:
+        return {
+            "hardware": self.hardware,
+            "budget": self.budget,
+            "channels": self.channels,
+            "tenants": [t.as_dict() for t in self.tenants],
+            "aggregate_peak": self.aggregate_peak,
+            "overflow_events": self.overflow_events,
+            "makespan_s": self.makespan_s,
+        }
+
+
+# ------------------------------------------------------------------- engine
+class MemoryRuntime:
+    """Co-schedules N tenant programs over K DMA channels under one budget."""
+
+    def __init__(
+        self,
+        hw: HardwareSpec,
+        budget: int | None = None,
+        channels: int = 2,
+        prefetch: str = "backsched",
+    ):
+        if prefetch not in ("backsched", "eager"):
+            raise ValueError(f"unknown prefetch policy {prefetch!r}")
+        self.hw = hw
+        self.budget = budget
+        self.num_channels = channels
+        self.prefetch = prefetch
+        self.channels = ChannelPool.make(channels)
+        self.acct = PoolAccountant(budget)
+        self.pending_outs: list[_PendingOut] = []
+        self.runs: dict[str, _TenantRun] = {}
+
+    def run(self, tenants: Sequence[Tenant]) -> RuntimeReport:
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            # The accountant, runs map and reports are keyed by name; two
+            # tenants sharing one would silently merge their residency.
+            raise ValueError(f"tenant names must be unique, got {names}")
+        queue: deque[Tenant] = deque(tenants)
+        running: list[_TenantRun] = []
+        reports: dict[str, TenantReport] = {}
+        order = [t.name for t in tenants]
+        reserved = 0
+        now = 0.0
+
+        def try_admit() -> None:
+            nonlocal reserved
+            while queue:
+                cand = queue[0]
+                floor = cand.resident_floor()
+                if self.budget is not None and floor > self.budget:
+                    # Can never fit, even alone: report, do not OOM-kill others.
+                    queue.popleft()
+                    reports[cand.name] = TenantReport(
+                        name=cand.name, status="unschedulable", baseline_s=0.0,
+                        duration_s=0.0, overhead=0.0, peak_resident=0, floor=floor,
+                        stalls=0, delayed_mallocs=0, admitted_at=-1.0,
+                        finished_at=-1.0, queue_wait_s=0.0,
+                    )
+                    continue
+                if self.budget is not None and reserved + floor > self.budget:
+                    return  # FIFO: wait for a running tenant to release floor
+                queue.popleft()
+                reserved += floor
+                run = _TenantRun(cand, self.hw, self, admit_t=now)
+                self.runs[cand.name] = run
+                running.append(run)
+
+        try_admit()
+        while running:
+            run = min(running, key=lambda r: r.t)
+            if run.step():
+                running.remove(run)
+                reserved -= run.floor
+                run.release_residency()
+                now = max(now, run.t)
+                dur = run.t - run.admit_t
+                base = run.baseline_s * run.iterations
+                reports[run.name] = TenantReport(
+                    name=run.name, status="completed", baseline_s=base,
+                    duration_s=dur,
+                    overhead=max(0.0, (dur - base) / base) if base > 0 else 0.0,
+                    peak_resident=self.acct.peak.get(run.name, 0),
+                    floor=run.floor, stalls=run.stalls,
+                    delayed_mallocs=run.delayed, admitted_at=run.admit_t,
+                    finished_at=run.t, queue_wait_s=run.admit_t,
+                )
+                try_admit()
+
+        ordered = [reports[n] for n in order if n in reports]
+        return RuntimeReport(
+            hardware=self.hw.name,
+            budget=self.budget,
+            channels=self.num_channels,
+            tenants=ordered,
+            aggregate_peak=self.acct.aggregate_peak,
+            overflow_events=self.acct.overflow_events,
+            makespan_s=now,
+        )
+
+
+# ------------------------------------------------------- single-tenant path
+def simulate_program(
+    trace: IterationTrace,
+    decisions: Sequence[SwapDecision],
+    hw: HardwareSpec,
+    limit: int | None = None,
+    channels: int = 2,
+    prefetch: str = "backsched",
+) -> SimResult:
+    """Replay one iteration of one program — the paper's simulator, now as a
+    1-tenant run of the runtime engine.  ``channels=2, prefetch="eager"``
+    reproduces ``core.simulator.simulate_swap_schedule`` exactly; other K
+    values model narrower/wider DMA engines and ``backsched`` (default) is
+    the runtime's just-in-time prefetch policy.
+
+    ``floor=0`` disables admission control to match the legacy contract: an
+    over-limit schedule runs (with delays), it is not queued.
+    """
+    rt = MemoryRuntime(hw, budget=limit, channels=channels, prefetch=prefetch)
+    tenant = Tenant("t0", trace, list(decisions), limit=limit, floor=0)
+    rt.run([tenant])
+    return rt.runs["t0"].sim_result()

@@ -1,0 +1,142 @@
+"""Build runtime tenants from solved MemoryPrograms and the plan cache.
+
+A tenant is one (trace, swap schedule) pair drawn from the ``repro.plan``
+pipeline.  ``tenant_from_program`` solves (or reuses) a SwapSelection at the
+tenant's HBM share; ``colocate_programs`` splits one shared budget across N
+programs proportionally to their isolated peaks, solves each tenant's plan
+at its share, and runs them together through the ``MemoryRuntime`` — the
+serving-fleet shape from TENSILE: several dynamic workloads, one device.
+
+Plans load through ``PlanCache`` warm-start exactly like the launchers: a
+program restored from disk contributes its cached schedule without
+re-tracing or re-solving.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.simulator import HardwareSpec, SimResult
+from ..plan.passes import ArtifactSave, PassContext, Pipeline, SwapSelection, TimingAssign
+from ..plan.program import MemoryProgram, swap_key
+from .engine import MemoryRuntime, RuntimeReport, Tenant, simulate_program
+
+
+def tenant_from_program(
+    name: str,
+    program: MemoryProgram,
+    hw: HardwareSpec,
+    limit: int,
+    scorer: str = "swdoa",
+    size_threshold: int = 1 << 20,
+    cache=None,
+    iterations: int = 1,
+) -> Tenant:
+    """Solve (or restore) the program's swap schedule at `limit` and wrap it
+    as a runtime tenant.  Newly-solved results persist when `cache` is set."""
+    ctx = PassContext(hw=hw, cache=cache, key=program.key, size_threshold=size_threshold)
+    passes = [TimingAssign(), SwapSelection(limit=limit, scorer=scorer)]
+    if cache is not None and program.key is not None:
+        passes.append(ArtifactSave())
+    program = Pipeline(passes).run(program, ctx)
+    summary = program.swap_summaries[swap_key(scorer, limit)]
+    return Tenant(
+        name=name,
+        trace=program.require_trace(),
+        decisions=list(summary.decisions),
+        limit=limit,
+        iterations=iterations,
+    )
+
+
+@dataclass
+class ColocationResult:
+    """A co-located run next to each tenant's isolated baselines.
+
+    Two isolation baselines bracket the comparison: ``natural_peaks`` is what
+    static per-tenant provisioning must reserve (the unswapped peak load of
+    each program), ``isolated`` is each tenant run alone under its own share
+    with its swap schedule.  Co-location wins when ``aggregate_peak`` lands
+    below the sum of the natural peaks at acceptable per-tenant overhead.
+    """
+
+    report: RuntimeReport
+    budget: int
+    isolated: dict[str, SimResult] = field(default_factory=dict)
+    natural_peaks: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def sum_isolated_peaks(self) -> int:
+        return sum(r.peak_resident for r in self.isolated.values())
+
+    @property
+    def sum_natural_peaks(self) -> int:
+        return sum(self.natural_peaks.values())
+
+    @property
+    def sharing_gain(self) -> float:
+        """Fraction of HBM saved by pooling vs statically provisioning each
+        tenant its natural peak: 1 - aggregate_peak / sum(natural peaks)."""
+        s = self.sum_natural_peaks
+        return 1.0 - self.report.aggregate_peak / s if s else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "budget": self.budget,
+            "sum_natural_peaks": self.sum_natural_peaks,
+            "sum_isolated_peaks": self.sum_isolated_peaks,
+            "aggregate_peak": self.report.aggregate_peak,
+            "sharing_gain": self.sharing_gain,
+            "natural_peaks": dict(self.natural_peaks),
+            "runtime": self.report.as_dict(),
+            "isolated": {
+                n: {
+                    "peak_resident": r.peak_resident,
+                    "overhead": r.overhead,
+                    "stalls": r.stalls,
+                }
+                for n, r in self.isolated.items()
+            },
+        }
+
+
+def colocate_programs(
+    named_programs: dict[str, MemoryProgram],
+    hw: HardwareSpec,
+    budget_frac: float = 0.8,
+    budget: int | None = None,
+    channels: int = 2,
+    scorer: str = "swdoa",
+    size_threshold: int = 1 << 20,
+    cache=None,
+    iterations: int = 1,
+) -> ColocationResult:
+    """Co-schedule N solved programs under one shared HBM budget.
+
+    The budget defaults to ``budget_frac`` of the sum of isolated peak loads;
+    each tenant's swap schedule is solved at its proportional share (clamped
+    to its trace peak so an under-committed tenant gets a no-op schedule).
+    """
+    peaks = {n: p.require_trace().peak_load() for n, p in named_programs.items()}
+    total = sum(peaks.values())
+    if budget is None:
+        budget = int(total * budget_frac)
+    tenants = []
+    for n, p in named_programs.items():
+        share = int(budget * peaks[n] / total) if total else budget
+        share = min(share, peaks[n])
+        tenants.append(
+            tenant_from_program(
+                n, p, hw, share, scorer=scorer,
+                size_threshold=size_threshold, cache=cache, iterations=iterations,
+            )
+        )
+    isolated = {
+        t.name: simulate_program(t.trace, t.decisions, hw, t.limit, channels=channels)
+        for t in tenants
+    }
+    rt = MemoryRuntime(hw, budget=budget, channels=channels)
+    report = rt.run(tenants)
+    return ColocationResult(
+        report=report, budget=budget, isolated=isolated, natural_peaks=peaks
+    )

@@ -223,6 +223,86 @@ def test_plan_solved_in_one_process_reloads_in_another(tmp_path):
     assert len(list((tmp_path / "plans").glob("*.json"))) == 1
 
 
+# --------------------------------------------------- eviction + versioning
+def _store_n(cache, n):
+    paths = []
+    for i in range(n):
+        prog = solved_program(PlanKey("synthetic", f"unit{i}", HW.name))
+        paths.append(cache.store(prog))
+    return paths
+
+
+def test_cache_evicts_oldest_past_size_bound(tmp_path):
+    probe = PlanCache(tmp_path / "probe")
+    size = _store_n(probe, 1)[0].stat().st_size
+    cache = PlanCache(tmp_path / "bound", max_bytes=int(2.5 * size))
+    _store_n(cache, 4)
+    kept = cache.keys()
+    assert len(kept) == 2, kept
+    # Newest artifacts survive; the earliest-stored were evicted.
+    assert cache.load(PlanKey("synthetic", "unit3", HW.name)) is not None
+    assert cache.load(PlanKey("synthetic", "unit0", HW.name)) is None
+    assert cache.total_bytes() <= int(2.5 * size)
+
+
+def test_cache_eviction_is_lru_not_fifo(tmp_path):
+    import os
+
+    cache = PlanCache(tmp_path, max_bytes=None)
+    p0, p1 = _store_n(cache, 2)
+    size = p0.stat().st_size
+    # Backdate both, then *load* unit0: the hit must refresh its recency.
+    os.utime(p0, (1000, 1000))
+    os.utime(p1, (2000, 2000))
+    assert cache.load(PlanKey("synthetic", "unit0", HW.name)) is not None
+    cache.max_bytes = int(2.5 * size)
+    cache.store(solved_program(PlanKey("synthetic", "unit2", HW.name)))
+    assert cache.load(PlanKey("synthetic", "unit0", HW.name)) is not None, "recently-used survives"
+    assert cache.load(PlanKey("synthetic", "unit1", HW.name)) is None, "LRU artifact evicted"
+
+
+def test_cache_never_evicts_just_written_artifact(tmp_path):
+    probe = PlanCache(tmp_path / "probe")
+    size = _store_n(probe, 1)[0].stat().st_size
+    cache = PlanCache(tmp_path / "tiny", max_bytes=size // 2)  # nothing fits
+    _store_n(cache, 2)
+    assert cache.keys() == [PlanKey("synthetic", "unit1", HW.name).cache_name()]
+
+
+def test_cache_version_mismatch_is_silent_miss(tmp_path):
+    import warnings
+
+    cache = PlanCache(tmp_path)
+    key = PlanKey("synthetic", "unit-v", HW.name)
+    path = cache.store(solved_program(key))
+    blob = json.loads(path.read_text())
+    blob["version"] = blob["version"] + 1
+    path.write_text(json.dumps(blob))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert cache.load(key) is None
+    assert not caught, "a schema-version miss must not warn (it is the upgrade path)"
+    assert cache.version_misses == 1
+    # Direct deserialization still refuses loudly (library contract).
+    with pytest.raises(ValueError):
+        program_from_json(blob)
+
+
+def test_cache_corrupt_artifact_warns_and_misses(tmp_path):
+    import warnings
+
+    cache = PlanCache(tmp_path)
+    key = PlanKey("synthetic", "unit-c", HW.name)
+    path = cache.store(solved_program(key))
+    for corrupt in ("{not json", "null", "[]"):
+        path.write_text(corrupt)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            assert cache.load(key) is None
+        assert caught, f"corruption {corrupt!r} (unlike versioning) should be surfaced"
+    assert cache.version_misses == 0, "corruption must not masquerade as a version miss"
+
+
 def test_cache_miss_without_step_fn_raises(tmp_path):
     with pytest.raises(PlanCacheMiss):
         MemoryPlanner(None, cache=PlanCache(tmp_path), key=PlanKey("a", "b", "c"))

@@ -17,5 +17,12 @@ python -m benchmarks.bench_smartpool --models vgg11 --batch 4 || { echo "FAIL sm
 echo "== chi/omega competitive-ratio regression gate =="
 python -m tools.check_ratios || { echo "FAIL ratio gate"; status=1; }
 
+echo "== runtime smoke benchmark: DMA channel scaling + colocation gates =="
+# Exits non-zero unless K=2 channels strictly beat K=1 somewhere (never losing)
+# and colocation lands under the sum of isolated peaks.  Committed
+# BENCH_runtime.json is the full-mode run; the smoke output stays out of tree.
+python -m benchmarks.bench_runtime --smoke --out "${TMPDIR:-/tmp}/BENCH_runtime_smoke.json" \
+  || { echo "FAIL runtime bench"; status=1; }
+
 [ "$status" -eq 0 ] && echo "CI OK" || echo "CI FAILED"
 exit "$status"
