@@ -1,0 +1,290 @@
+"""Frozen reference copies of the pre-fast-path solvers.
+
+These are byte-for-byte behavioural pins, the same technique as the runtime
+engine's ``_reference_simulate`` (tests/test_runtime.py): the production
+solvers in ``core/smartpool.py`` and ``core/autoswap.py`` were rewritten for
+near-linear solve time, and every rewrite is validated against these copies —
+``reference_solve`` placements must match bit-for-bit, reference SWDOA scores
+to float tolerance (the incremental rescore accumulates O(k*eps) rounding).
+
+Do NOT edit this module when changing the production solvers; that would
+defeat the pin.  ``benchmarks/bench_solvetime.py`` also times these copies to
+report old-vs-new speedups.
+"""
+
+from __future__ import annotations
+
+from typing import Literal, Sequence
+
+import numpy as np
+
+from .events import IterationTrace, VariableInfo
+from .simulator import HardwareSpec, assign_times
+
+
+# --------------------------------------------------------------- SmartPool
+def reference_solve(
+    trace: IterationTrace,
+    method: Literal["best_fit", "first_fit"] = "best_fit",
+    alignment: int = 256,
+):
+    """The original O(n^2) SmartPool solve (pairwise mask + per-placement
+    re-sort), kept verbatim.  Returns the same AllocationPlan type as the
+    production solver."""
+    from .smartpool import AllocationPlan
+
+    variables = [v for v in trace.variables if v.size > 0]
+    order = sorted(variables, key=lambda v: (-v.size, v.alloc_index))
+
+    n = len(order)
+    alloc_t = np.fromiter((v.alloc_index for v in order), np.int64, n)
+    free_t = np.fromiter((v.free_index for v in order), np.int64, n)
+    sizes = np.fromiter((_align(v.size, alignment) for v in order), np.int64, n)
+    offsets = np.zeros(n, np.int64)
+
+    footprint = 0
+    for i, v in enumerate(order):
+        if i == 0:
+            offsets[0] = 0
+            footprint = int(sizes[0])
+            continue
+        mask = (alloc_t[:i] < free_t[i]) & (free_t[:i] > alloc_t[i])
+        occ_off = offsets[:i][mask]
+        occ_end = occ_off + sizes[:i][mask]
+        offset = _reference_place(occ_off, occ_end, int(sizes[i]), footprint, method)
+        offsets[i] = offset
+        footprint = max(footprint, offset + int(sizes[i]))
+
+    plan_offsets = {v.var: int(offsets[i]) for i, v in enumerate(order)}
+    lookup = {v.alloc_index: plan_offsets[v.var] for v in order}
+    return AllocationPlan(
+        offsets=plan_offsets,
+        footprint=int(footprint),
+        peak_load=_aligned_peak(variables, alignment),
+        method=method,
+        lookup=lookup,
+    )
+
+
+def _align(x: int, a: int) -> int:
+    return (x + a - 1) // a * a
+
+
+def _aligned_peak(variables: list[VariableInfo], alignment: int) -> int:
+    deltas: dict[int, int] = {}
+    for v in variables:
+        s = _align(v.size, alignment)
+        deltas[v.alloc_index] = deltas.get(v.alloc_index, 0) + s
+        deltas[v.free_index] = deltas.get(v.free_index, 0) - s
+    cur = peak = 0
+    for t in sorted(deltas):
+        cur += deltas[t]
+        peak = max(peak, cur)
+    return peak
+
+
+def _reference_place(
+    occ_off: np.ndarray,
+    occ_end: np.ndarray,
+    size: int,
+    footprint: int,
+    method: str,
+) -> int:
+    if occ_off.size == 0:
+        return 0
+    order = np.argsort(occ_off, kind="stable")
+    off_s, end_s = occ_off[order], occ_end[order]
+    best_off = -1
+    best_waste = None
+    cursor = 0
+    m = off_s.shape[0]
+    for k in range(m):
+        o, e = int(off_s[k]), int(end_s[k])
+        if o > cursor:
+            hole = o - cursor
+            if hole >= size:
+                if method == "first_fit":
+                    return cursor
+                waste = hole - size
+                if best_waste is None or waste < best_waste:
+                    best_off, best_waste = cursor, waste
+        cursor = max(cursor, e)
+    if method == "best_fit" and best_off >= 0:
+        return best_off
+    return cursor
+
+
+# ---------------------------------------------------------------- AutoSwap
+class ReferenceAutoSwapPlanner:
+    """The original AutoSwapPlanner scoring/selection loop, kept verbatim:
+    O(k) ``remaining.remove`` in the SWDOA loop, ``np.diff`` of the full time
+    axis on every ``_load_area`` call, per-``select`` full-curve active masks.
+    """
+
+    def __init__(
+        self,
+        trace: IterationTrace,
+        hw: HardwareSpec,
+        size_threshold: int = 1 << 20,
+        include_wrap: bool = True,
+    ):
+        from .autoswap import Candidate
+
+        self._Candidate = Candidate
+        self.trace = trace
+        self.hw = hw
+        if trace.op_times is None:
+            assign_times(trace, hw)
+        self.times = np.asarray(trace.op_times)
+        self.load = np.asarray(trace.load_curve(), dtype=np.float64)
+        self.peak_load = int(self.load.max()) if self.load.size else 0
+        self.peak_time = int(self.load.argmax()) if self.load.size else 0
+        self.size_threshold = size_threshold
+        self.candidates = self._find_candidates(include_wrap)
+        self._score_all()
+
+    def _find_candidates(self, include_wrap: bool):
+        out = []
+        for v in self.trace.variables:
+            if v.size < self.size_threshold:
+                continue
+            gap = self._largest_gap(v)
+            if gap is not None:
+                span = self._gap_spanning_peak(v)
+                a, b = span if span is not None else gap
+                out.append(self._Candidate(v.var, v.size, a, b))
+            if include_wrap and v.free_index >= self.trace.num_indices and v.accesses:
+                out.append(
+                    self._Candidate(v.var, v.size, max(v.accesses), min(v.accesses), wraps=True)
+                )
+        return out
+
+    def _largest_gap(self, v: VariableInfo):
+        acc = sorted(v.accesses)
+        best = None
+        for a, b in zip(acc, acc[1:]):
+            if b - a > 1 and (best is None or b - a > best[1] - best[0]):
+                best = (a, b)
+        return best
+
+    def _gap_spanning_peak(self, v: VariableInfo):
+        acc = sorted(v.accesses)
+        for a, b in zip(acc, acc[1:]):
+            if a <= self.peak_time < b:
+                return (a, b)
+        return None
+
+    def _active(self, limit: int):
+        over = self.load > limit
+        if not over.any():
+            return []
+        return [c for c in self.candidates if bool((self._absence_mask(c) & over).any())]
+
+    def _interval_seconds(self, c) -> float:
+        if not c.wraps:
+            return float(self.times[c.in_before] - self.times[c.out_after])
+        total = float(self.times[-1])
+        return (total - float(self.times[c.out_after])) + float(self.times[c.in_before])
+
+    def _load_area(self, load: np.ndarray, c) -> float:
+        dt = np.diff(self.times)
+        if not c.wraps:
+            sl = slice(c.out_after, c.in_before)
+            return float((load[sl] * dt[sl]).sum())
+        head = slice(0, c.in_before)
+        tail = slice(c.out_after, len(load))
+        return float((load[head] * dt[head]).sum() + (load[tail] * dt[tail]).sum())
+
+    def _absence_mask(self, c) -> np.ndarray:
+        m = np.zeros(len(self.load), dtype=bool)
+        if not c.wraps:
+            m[c.out_after : c.in_before] = True
+        else:
+            m[: c.in_before] = True
+            m[c.out_after :] = True
+        return m
+
+    def _score_all(self) -> None:
+        transfer = lambda c: 2.0 * c.size / self.hw.link_bw
+        for c in self.candidates:
+            doa = self._interval_seconds(c) - transfer(c)
+            aoa = doa * c.size if doa >= 0 else doa / c.size
+            wdoa = self._load_area(self.load, c)
+            c.scores.update(doa=doa, aoa=aoa, wdoa=wdoa)
+        work = self.load.copy()
+        remaining = list(self.candidates)
+        while remaining:
+            scored = [(self._load_area(work, c), c) for c in remaining]
+            best_score, best = max(scored, key=lambda s: s[0])
+            best.scores["swdoa"] = best_score
+            work = work - best.size * self._absence_mask(best)
+            remaining.remove(best)
+
+    def ranked(self, method=None, weights: Sequence[float] | None = None):
+        if weights is not None:
+            z = self.standardized()
+            combo = (
+                weights[0] * z["aoa"] + weights[1] * z["doa"]
+                + weights[2] * z["wdoa"] + weights[3] * z["swdoa"]
+            )
+            order = np.argsort(-combo, kind="stable")
+            return [self.candidates[i] for i in order]
+        assert method is not None
+        return sorted(self.candidates, key=lambda c: -c.scores[method])
+
+    def standardized(self):
+        out = {}
+        for k in ("doa", "aoa", "wdoa", "swdoa"):
+            x = np.array([c.scores[k] for c in self.candidates], dtype=np.float64)
+            std = x.std()
+            out[k] = (x - x.mean()) / std if std > 0 else np.zeros_like(x)
+        return out
+
+    def select(self, limit: int, method="swdoa", weights=None):
+        active_set = {(c.var, c.wraps) for c in self._active(limit)}
+        work = self.load.copy()
+        chosen = []
+        seen: set[int] = set()
+        for c in self.ranked(method, weights):
+            if work.max() <= limit:
+                break
+            if (c.var, c.wraps) not in active_set:
+                continue
+            if c.var in seen:
+                continue
+            seen.add(c.var)
+            work = work - c.size * self._absence_mask(c)
+            chosen.append(c.decision())
+        return chosen
+
+    def load_min(self) -> int:
+        work = self.load.copy()
+        seen: set[int] = set()
+        for c in self.candidates:
+            if c.var in seen:
+                continue
+            seen.add(c.var)
+            work = work - c.size * self._absence_mask(c)
+        return int(work.max()) if work.size else 0
+
+    def evaluate(self, limit: int, method="swdoa", weights=None):
+        from .simulator import simulate_swap_schedule
+
+        decisions = self.select(limit, method, weights)
+        return simulate_swap_schedule(self.trace, decisions, self.hw, limit)
+
+    def max_zero_overhead_reduction(
+        self, method="swdoa", weights=None, tol: float = 0.005, grid: int = 32
+    ):
+        lo, hi = self.load_min(), self.peak_load
+        if hi <= lo:
+            return hi, 0.0
+        best_limit, best_ov = hi, 0.0
+        for k in range(1, grid + 1):
+            limit = int(hi - (hi - lo) * k / grid)
+            r = self.evaluate(limit, method, weights)
+            if r.overhead <= tol:
+                best_limit, best_ov = limit, r.overhead
+            elif r.overhead > 5 * tol and k > grid // 2:
+                break
+        return best_limit, best_ov

@@ -84,35 +84,67 @@ class IterationTrace:
     # Optional op index -> (flops, bytes_touched): compute-cost estimates from
     # the jaxpr tracer, consumed by core/simulator.py to build op_times.
     op_costs: dict[int, tuple[float, float]] | None = None
+    # Memoized load curve: (guard, int64 ndarray).  The guard catches the
+    # structural mutations that occur in practice (adding/removing variables,
+    # re-detecting the horizon); in-place edits of an existing VariableInfo's
+    # lifetime must call ``invalidate_cache()``.
+    _load_cache: "tuple | None" = field(default=None, repr=False, compare=False)
 
     def by_id(self) -> dict[int, VariableInfo]:
         return {v.var: v for v in self.variables}
 
     # ---------------------------------------------------------------- loads
+    def invalidate_cache(self) -> None:
+        """Drop the memoized load curve after mutating variable lifetimes."""
+        self._load_cache = None
+
+    def _cache_guard(self) -> tuple:
+        return (len(self.variables), self.num_indices)
+
+    def load_curve_array(self) -> "object":
+        """Memoized load curve as an int64 cumsum over alloc/free deltas.
+
+        One O(n + T) numpy pass, shared by every consumer (AutoSwap scoring,
+        the planner facade, the runtime's resident-floor accounting) that
+        previously each re-derived it from a pure-Python loop.  Callers must
+        treat the returned array as read-only; copy before mutating.
+        """
+        import numpy as np
+
+        guard = self._cache_guard()
+        if self._load_cache is not None and self._load_cache[0] == guard:
+            return self._load_cache[1]
+        deltas = np.zeros(self.num_indices + 1, dtype=np.int64)
+        n = len(self.variables)
+        if n:
+            alloc = np.fromiter((v.alloc_index for v in self.variables), np.int64, n)
+            free = np.fromiter((v.free_index for v in self.variables), np.int64, n)
+            size = np.fromiter((v.size for v in self.variables), np.int64, n)
+            np.add.at(deltas, alloc, size)
+            inb = free <= self.num_indices
+            np.subtract.at(deltas, free[inb], size[inb])
+        curve = np.cumsum(deltas[: self.num_indices])
+        curve.flags.writeable = False
+        self._load_cache = (guard, curve)
+        return curve
+
     def load_curve(self) -> list[int]:
-        """Memory load (bytes) at every operation index (paper Definition 2)."""
-        deltas = [0] * (self.num_indices + 1)
-        for v in self.variables:
-            deltas[v.alloc_index] += v.size
-            if v.free_index <= self.num_indices:
-                deltas[v.free_index] -= v.size
-        out, cur = [], 0
-        for i in range(self.num_indices):
-            cur += deltas[i]
-            out.append(cur)
-        return out
+        """Memory load (bytes) at every operation index (paper Definition 2).
+
+        Returns a fresh list (callers mutate it, e.g. the runtime's
+        ``planned_peak``); the underlying curve is memoized."""
+        return self.load_curve_array().tolist()
 
     def peak_load(self) -> int:
         """omega(G): the largest-clique weight == peak memory load (paper Eq. 1)."""
-        curve = self.load_curve()
-        return max(curve) if curve else 0
+        curve = self.load_curve_array()
+        return int(curve.max()) if curve.size else 0
 
     def peak_time(self) -> int:
-        curve = self.load_curve()
-        if not curve:
+        curve = self.load_curve_array()
+        if not curve.size:
             return 0
-        m = max(curve)
-        return curve.index(m)
+        return int(curve.argmax())
 
     def total_bytes(self) -> int:
         return sum(v.size for v in self.variables)

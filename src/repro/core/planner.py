@@ -115,6 +115,14 @@ class MemoryPlanner:
     def from_cache(self) -> bool:
         return self.program.from_cache
 
+    @property
+    def solve_stats(self) -> dict[str, float]:
+        """Wall ms per solved stage ("pool:<method>", "swap:<key>").  For a
+        program restored from the plan cache these are the *solving*
+        process's timings (persisted provenance) — this process paid only
+        the cache read; check ``from_cache`` to tell the two apart."""
+        return dict(self.program.solve_ms)
+
     def save(self) -> None:
         """Persist the program's solved artifacts now (also done per-query)."""
         self.program.dirty = True

@@ -112,11 +112,13 @@ def print_colocation(result: ColocationResult) -> None:
             continue
         iso = result.isolated.get(t.name)
         iso_oh = f" (isolated {iso.overhead*100:.2f}%)" if iso else ""
+        solve = result.plan_solve_ms.get(t.name)
+        solve_s = f"  plan solve {solve:.1f}ms" if solve is not None else ""
         print(
             f"[runtime]   {t.name}: overhead {t.overhead*100:.2f}%{iso_oh}  "
             f"peak {t.peak_resident/2**20:.1f}MiB  stalls {t.stalls}  "
             f"delayed mallocs {t.delayed_mallocs}  "
-            f"queue wait {t.queue_wait_s*1000:.2f}ms"
+            f"queue wait {t.queue_wait_s*1000:.2f}ms{solve_s}"
         )
     print(
         f"[runtime] aggregate peak {rep.aggregate_peak/2**20:.1f}MiB vs "

@@ -168,6 +168,10 @@ def program_to_json(program: MemoryProgram) -> dict:
         },
         "swap_summaries": {k: _summary_to_json(s) for k, s in sorted(program.swap_summaries.items())},
         "offload_plans": {k: _offload_to_json(p) for k, p in sorted(program.offload_plans.items())},
+        # Solve-time provenance (ms per solved stage).  Stored for
+        # observability; dumps_canonical() strips it, because wall-time is
+        # process state, not plan identity.
+        "solve_ms": {k: round(v, 3) for k, v in sorted(program.solve_ms.items())},
     }
 
 
@@ -183,12 +187,18 @@ def program_from_json(d: dict) -> MemoryProgram:
     }
     program.swap_summaries = {k: _summary_from_json(s) for k, s in d["swap_summaries"].items()}
     program.offload_plans = {k: _offload_from_json(p) for k, p in d["offload_plans"].items()}
+    program.solve_ms = {k: float(v) for k, v in d.get("solve_ms", {}).items()}
     return program
 
 
 def dumps_canonical(program: MemoryProgram) -> str:
-    """Canonical byte form: plans are equal iff their dumps are equal."""
-    return json.dumps(program_to_json(program), sort_keys=True, separators=(",", ":"))
+    """Canonical byte form: plans are equal iff their dumps are equal.
+
+    Solve-time provenance is excluded — two byte-equal plans may have been
+    solved at different speeds."""
+    payload = program_to_json(program)
+    payload.pop("solve_ms", None)
+    return json.dumps(payload, sort_keys=True, separators=(",", ":"))
 
 
 class PlanCache:
@@ -251,7 +261,12 @@ class PlanCache:
             # (prefill/decode workers may run as different users).
             os.fchmod(fd, 0o644)
             with os.fdopen(fd, "w") as f:
-                f.write(dumps_canonical(program))
+                # Full payload (canonical plan + solve-time provenance).
+                f.write(
+                    json.dumps(
+                        program_to_json(program), sort_keys=True, separators=(",", ":")
+                    )
+                )
             os.replace(tmp, path)
         except BaseException:
             if os.path.exists(tmp):

@@ -20,6 +20,7 @@ planner facade, and serialized artifacts all describe the same computation.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Protocol, Sequence, runtime_checkable
 
@@ -179,13 +180,17 @@ class PoolPlacement:
         for m in self.methods:
             if m in program.pool_plans or m in program.baselines:
                 continue
+            t0 = time.perf_counter()
             result = get_pool(m)(trace)
+            ms = (time.perf_counter() - t0) * 1e3
             if isinstance(result, AllocationPlan):
                 program.pool_plans[m] = result
             elif isinstance(result, PoolStats):
                 program.baselines[m] = result
             else:
                 raise TypeError(f"pool {m!r} returned {type(result).__name__}")
+            program.solve_ms[f"pool:{m}"] = ms
+            ctx.note(f"[plan] pool {m}: solved in {ms:.1f} ms")
             program.dirty = True
         return program
 
@@ -211,12 +216,16 @@ class SwapSelection:
             ctx.hw.name,
         ):
             return program
+        t0 = time.perf_counter()
         planner = program.swap_planner(ctx.hw, ctx.size_threshold)
         if self.weights is not None:
             decisions = planner.select(self.limit, None, list(self.weights))
         else:
             decisions = get_scorer(self.scorer)(planner, self.limit)
         sim = simulate_swap_schedule(program.require_trace(), decisions, ctx.hw, self.limit)
+        ms = (time.perf_counter() - t0) * 1e3
+        program.solve_ms[f"swap:{k}"] = ms
+        ctx.note(f"[plan] swap {k}: solved in {ms:.1f} ms")
         by_id = program.require_trace().by_id()
         per_name: dict[str, int] = {}
         for d in decisions:

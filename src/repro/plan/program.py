@@ -101,6 +101,13 @@ class MemoryProgram:
     baselines: dict[str, PoolStats] = field(default_factory=dict)
     swap_summaries: dict[str, SwapSummary] = field(default_factory=dict)
     offload_plans: dict[str, OffloadPlan] = field(default_factory=dict)
+    # Solve-time provenance: pass-stage name ("pool:best_fit",
+    # "swap:swdoa@<limit>") -> wall milliseconds the stage took to solve.
+    # Persisted with the artifact, so a cache-restored program reports the
+    # *original* solving process's timings (from_cache distinguishes them).
+    # Excluded from the canonical plan bytes (timing is not plan identity),
+    # so two solves of the same instance still compare byte-equal.
+    solve_ms: dict[str, float] = field(default_factory=dict)
     from_cache: bool = False          # True when restored by plan/artifact.py
     dirty: bool = False               # True when a pass added new results
     _swap_planner: AutoSwapPlanner | None = field(default=None, repr=False)

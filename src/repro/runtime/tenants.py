@@ -14,6 +14,7 @@ re-tracing or re-solving.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 from ..core.simulator import HardwareSpec, SimResult
@@ -64,6 +65,10 @@ class ColocationResult:
     budget: int
     isolated: dict[str, SimResult] = field(default_factory=dict)
     natural_peaks: dict[str, int] = field(default_factory=dict)
+    # Wall ms spent solving each tenant's plan at admission (cache hits are
+    # ~0): plans are solved online when a tenant is admitted, so solve
+    # latency is part of the serving path and reported next to overhead.
+    plan_solve_ms: dict[str, float] = field(default_factory=dict)
 
     @property
     def sum_isolated_peaks(self) -> int:
@@ -88,6 +93,7 @@ class ColocationResult:
             "aggregate_peak": self.report.aggregate_peak,
             "sharing_gain": self.sharing_gain,
             "natural_peaks": dict(self.natural_peaks),
+            "plan_solve_ms": {n: round(v, 3) for n, v in self.plan_solve_ms.items()},
             "runtime": self.report.as_dict(),
             "isolated": {
                 n: {
@@ -122,15 +128,18 @@ def colocate_programs(
     if budget is None:
         budget = int(total * budget_frac)
     tenants = []
+    plan_solve_ms: dict[str, float] = {}
     for n, p in named_programs.items():
         share = int(budget * peaks[n] / total) if total else budget
         share = min(share, peaks[n])
+        t0 = time.perf_counter()
         tenants.append(
             tenant_from_program(
                 n, p, hw, share, scorer=scorer,
                 size_threshold=size_threshold, cache=cache, iterations=iterations,
             )
         )
+        plan_solve_ms[n] = (time.perf_counter() - t0) * 1e3
     isolated = {
         t.name: simulate_program(t.trace, t.decisions, hw, t.limit, channels=channels)
         for t in tenants
@@ -138,5 +147,6 @@ def colocate_programs(
     rt = MemoryRuntime(hw, budget=budget, channels=channels)
     report = rt.run(tenants)
     return ColocationResult(
-        report=report, budget=budget, isolated=isolated, natural_peaks=peaks
+        report=report, budget=budget, isolated=isolated, natural_peaks=peaks,
+        plan_solve_ms=plan_solve_ms,
     )

@@ -1,0 +1,121 @@
+"""CI regression gate for trace->plan solve time (Issue 3).
+
+Runs the solve-time benchmark in smoke mode (seconds) and compares each
+stage against tools/solvetime_baseline.json, failing the build on a >1.25x
+solve-time regression (mirroring the chi/omega ratio gate in
+tools/check_ratios.py); plan-equality failures fail outright.
+
+The gated quantity is the *fast/reference time ratio* measured in the same
+process, not absolute wall time: the frozen reference solver
+(core/_solver_reference.py) doubles as a per-machine speed normalizer, so a
+slower CI runner shifts both numerator and denominator and the committed
+baseline stays valid across machines.  Absolute times are recorded in the
+baseline for context.  Wall time is still noisy at smoke scale, so a
+failing measurement is retried once (minima taken) and stages that complete
+under a 10 ms floor never fail.
+
+    PYTHONPATH=src python -m tools.check_solvetime            # check
+    PYTHONPATH=src python -m tools.check_solvetime --write    # refresh baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).resolve().parent / "solvetime_baseline.json"
+TOLERANCE = 0.25   # fail on >1.25x relative solve-time regression
+NOISE_FLOOR_S = 0.010  # stages still under 10 ms are noise, never a failure
+
+
+def measure(repeats: int = 1) -> dict:
+    """Per-stage {fast_s, ref_s} minima over ``repeats`` smoke runs."""
+    from benchmarks.bench_solvetime import run
+
+    out: dict = {"plans_equal": True, "stages": {}}
+    for _ in range(repeats):
+        result = run(smoke=True)
+        out["plans_equal"] &= result["all_plans_equal"]
+        for r in result["traces"]:
+            name = r["name"]
+            for stage, cell in (
+                ("smartpool.best_fit", r["smartpool"]["best_fit"]),
+                ("smartpool.first_fit", r["smartpool"]["first_fit"]),
+                ("autoswap", r["autoswap"]),
+                ("pipeline", r["pipeline"]),
+            ):
+                k = f"{name}/{stage}"
+                prev = out["stages"].get(k)
+                cur = {"fast_s": cell["fast_s"], "ref_s": cell["ref_s"]}
+                if prev is not None:
+                    cur = {m: min(prev[m], cur[m]) for m in cur}
+                out["stages"][k] = cur
+    return out
+
+
+def _ratio(cell: dict) -> float:
+    return cell["fast_s"] / cell["ref_s"] if cell["ref_s"] else float("inf")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true", help="refresh the baseline file")
+    args = ap.parse_args(argv)
+
+    current = measure(repeats=2 if args.write else 1)
+    if not current["plans_equal"]:
+        print("FAIL plans_equal: fast solvers diverged from the frozen reference", file=sys.stderr)
+        return 1
+    if args.write:
+        BASELINE.write_text(json.dumps(current, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {BASELINE}")
+        return 0
+
+    baseline = json.loads(BASELINE.read_text())
+    stages = dict(current["stages"])
+    retried = False
+    failures = []
+
+    def regressed(now: dict, base: dict) -> bool:
+        return (
+            _ratio(now) > _ratio(base) * (1 + TOLERANCE)
+            and now["fast_s"] > NOISE_FLOOR_S
+        )
+
+    # A stage measured now but absent from the baseline would silently ship
+    # without regression coverage — force a baseline refresh instead.
+    for name in sorted(set(stages) - set(baseline["stages"])):
+        failures.append(f"{name}: not in baseline — refresh with --write")
+
+    for name, base in sorted(baseline["stages"].items()):
+        now = stages.get(name)
+        if now is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        if regressed(now, base) and not retried:
+            # One retry for the whole run: wall time is noisy, take minima.
+            retried = True
+            again = measure()["stages"]
+            stages = {
+                k: {m: min(v[m], again.get(k, v)[m]) for m in v}
+                for k, v in stages.items()
+            }
+            now = stages[name]
+        msg = (
+            f"{name}: fast/ref {_ratio(now):.3f} vs baseline {_ratio(base):.3f} "
+            f"(fast {now['fast_s']*1e3:.1f}ms, baseline {base['fast_s']*1e3:.1f}ms)"
+        )
+        if regressed(now, base):
+            failures.append(f"{msg} — >{TOLERANCE:.0%} solve-time regression")
+        else:
+            print(f"ok {msg}")
+    if failures:
+        print("\n".join("FAIL " + f for f in failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

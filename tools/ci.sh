@@ -17,6 +17,12 @@ python -m benchmarks.bench_smartpool --models vgg11 --batch 4 || { echo "FAIL sm
 echo "== chi/omega competitive-ratio regression gate =="
 python -m tools.check_ratios || { echo "FAIL ratio gate"; status=1; }
 
+echo "== solve-time smoke benchmark + regression gate =="
+# Runs benchmarks.bench_solvetime in smoke mode (fast-vs-reference plan
+# equality on every cell) and fails on >1.25x regression of the
+# fast/reference solve-time ratio vs tools/solvetime_baseline.json.
+python -m tools.check_solvetime || { echo "FAIL solvetime gate"; status=1; }
+
 echo "== runtime smoke benchmark: DMA channel scaling + colocation gates =="
 # Exits non-zero unless K=2 channels strictly beat K=1 somewhere (never losing)
 # and colocation lands under the sum of isolated peaks.  Committed
