@@ -1,0 +1,215 @@
+"""Churn benchmark: preemptive plan renegotiation vs FIFO queueing.
+
+One long-running base tenant (the victim candidate) plus a seeded Poisson
+stream of newcomers share one HBM budget.  The same workload runs twice
+through the ``repro.runtime`` engine:
+
+  * **fifo** — a newcomer whose resident floor doesn't fit waits until a
+    running tenant finishes and releases its reservation;
+  * **renegotiate** — the runtime re-solves the victim's swap plan at a
+    lower limit (the near-linear SwapSelection path) and applies it at the
+    victim's next iteration barrier, admitting the newcomer into the freed
+    reservation.
+
+Acceptance (how ``tools/ci.sh`` gates the smoke mode):
+  * renegotiation strictly reduces the newcomers' mean queue wait under the
+    same Poisson workload;
+  * the victim's added overhead stays bounded (it swaps more at a lower
+    limit, it is not starved);
+  * zero ``overflow_events`` in both runs (the budget is never force-
+    exceeded);
+  * the 1-tenant/K=2/eager path stays bit-for-bit equal to the frozen
+    pre-runtime reference simulator (``core/_solver_reference.py``).
+
+Writes ``BENCH_churn.json`` (``--out``); exits non-zero when an acceptance
+flag fails.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_churn [--smoke] [--out BENCH_churn.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core._solver_reference import reference_simulate_swap_schedule
+from repro.core.autoswap import AutoSwapPlanner
+from repro.core.simulator import GTX_1080TI
+from repro.runtime import (
+    MemoryRuntime,
+    Tenant,
+    planned_peak,
+    poisson_workload,
+    simulate_program,
+    synthetic_train_trace,
+)
+
+HW = GTX_1080TI
+SIZE_THRESHOLD = 1 << 20
+LIMIT_FRAC = 0.7          # each plan solved at 70% of its trace peak
+VICTIM_OVERHEAD_BOUND = 0.5   # added victim overhead (absolute) allowed
+
+REFERENCE_FIELDS = ("baseline_s", "duration_s", "peak_resident", "stalls",
+                    "delayed_mallocs", "tail_spill_s", "out_events", "in_events")
+
+
+def solve_template(trace):
+    pl = AutoSwapPlanner(trace, HW, size_threshold=SIZE_THRESHOLD)
+    limit = int(pl.peak_load * LIMIT_FRAC)
+    decisions = pl.select(limit, "swdoa")
+    return limit, decisions, planned_peak(trace, decisions)
+
+
+def build_workload(smoke: bool, seed: int):
+    """Templates + one base tenant + a Poisson newcomer stream."""
+    if smoke:
+        layers = {"base": 10, "small": 4, "medium": 6}
+        n_arrivals, rate_hz, base_iters = 4, 60.0, 6
+    else:
+        layers = {"base": 14, "small": 6, "medium": 10}
+        n_arrivals, rate_hz, base_iters = 8, 40.0, 10
+    templates = {n: synthetic_train_trace(l) for n, l in layers.items()}
+    plans = {n: solve_template(tr) for n, tr in templates.items()}
+    items = poisson_workload(
+        ["small", "medium"], n_arrivals, rate_hz, seed=seed, iterations=(1, 3)
+    )
+    floors = {n: p[2] for n, p in plans.items()}
+    # A small newcomer fits next to the base's full floor; a medium one does
+    # not — under FIFO it waits for the base to finish, under renegotiation
+    # the base shrinks at its next iteration barrier.
+    budget = floors["base"] + (floors["small"] + floors["medium"]) // 2
+    return templates, plans, items, base_iters, budget
+
+
+def make_tenants(templates, plans, items, base_iters):
+    """Fresh Tenant objects per run (floors are cached on the instance)."""
+    tenants = [
+        Tenant(
+            "base", templates["base"], list(plans["base"][1]),
+            limit=plans["base"][0], iterations=base_iters, priority=0.5,
+        )
+    ]
+    for it in items:
+        limit, decisions, _ = plans[it.template]
+        tenants.append(
+            Tenant(
+                it.name, templates[it.template], list(decisions), limit=limit,
+                iterations=it.iterations, arrival_t=it.arrival_t,
+                priority=it.priority,
+            )
+        )
+    return tenants
+
+
+def run_policy(templates, plans, items, base_iters, budget, renegotiate: bool):
+    rt = MemoryRuntime(
+        HW, budget=budget, channels=2, renegotiate=renegotiate,
+        replan_size_threshold=SIZE_THRESHOLD,
+    )
+    report = rt.run(make_tenants(templates, plans, items, base_iters))
+    newcomers = [t for t in report.tenants if t.arrival_t > 0.0]
+    waits = [t.queue_wait_s for t in newcomers]
+    return report, {
+        "policy": report.policy,
+        "makespan_s": report.makespan_s,
+        "overflow_events": report.overflow_events,
+        "aggregate_peak": report.aggregate_peak,
+        "newcomer_mean_wait_s": sum(waits) / len(waits) if waits else 0.0,
+        "newcomer_max_wait_s": max(waits) if waits else 0.0,
+        "renegotiations": report.renegotiations,
+        "renegotiations_cancelled": report.renegotiations_cancelled,
+        "renegotiation_freed_bytes": report.renegotiation_freed_bytes,
+        "renegotiation_solve_ms": round(report.renegotiation_solve_ms, 3),
+        "tenants": [t.as_dict() for t in report.tenants],
+    }
+
+
+def reference_check(templates, plans) -> dict:
+    """The engine's 1-tenant/2-channel/eager path vs the frozen simulator."""
+    diffs = []
+    for name, trace in templates.items():
+        limit, decisions, _ = plans[name]
+        ref = reference_simulate_swap_schedule(trace, decisions, HW, limit)
+        got = simulate_program(trace, decisions, HW, limit, channels=2, prefetch="eager")
+        for f in REFERENCE_FIELDS:
+            if getattr(got, f) != getattr(ref, f):
+                diffs.append(f"{name}.{f}")
+    return {"bit_for_bit_equal": not diffs, "mismatches": diffs}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces / short stream for CI")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--out", default="BENCH_churn.json")
+    args = ap.parse_args(argv)
+
+    templates, plans, items, base_iters, budget = build_workload(args.smoke, args.seed)
+    _, fifo = run_policy(templates, plans, items, base_iters, budget, renegotiate=False)
+    reneg_rep, reneg = run_policy(templates, plans, items, base_iters, budget, renegotiate=True)
+    ref = reference_check(templates, plans)
+
+    fifo_oh = {t["name"]: t["overhead"] for t in fifo["tenants"]}
+    added_overhead = max(
+        (t["overhead"] - fifo_oh.get(t["name"], 0.0) for t in reneg["tenants"]),
+        default=0.0,
+    )
+
+    ok_wait = reneg["newcomer_mean_wait_s"] < fifo["newcomer_mean_wait_s"]
+    ok_overflow = fifo["overflow_events"] == 0 and reneg["overflow_events"] == 0
+    ok_victim = added_overhead <= VICTIM_OVERHEAD_BOUND
+    ok_ref = ref["bit_for_bit_equal"]
+
+    report = {
+        "mode": "smoke" if args.smoke else "full",
+        "hardware": HW.name,
+        "seed": args.seed,
+        "limit_frac": LIMIT_FRAC,
+        "budget": budget,
+        "floors": {n: p[2] for n, p in plans.items()},
+        "workload": [it.as_dict() for it in items],
+        "base_iterations": base_iters,
+        "fifo": fifo,
+        "renegotiate": reneg,
+        "added_victim_overhead": added_overhead,
+        "reference_check": ref,
+        "acceptance": {
+            "renegotiation_reduces_queue_wait": ok_wait,
+            "zero_overflow_events": ok_overflow,
+            "victim_overhead_bounded": ok_victim,
+            "single_tenant_matches_reference": ok_ref,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    print(
+        f"churn ({report['mode']}): {len(items)} Poisson newcomers over a "
+        f"{base_iters}-iteration base tenant, budget {budget/2**20:.1f}MiB"
+    )
+    print(
+        f"  fifo:        mean wait {fifo['newcomer_mean_wait_s']*1e3:8.2f}ms  "
+        f"max {fifo['newcomer_max_wait_s']*1e3:8.2f}ms  "
+        f"makespan {fifo['makespan_s']*1e3:8.2f}ms  overflow {fifo['overflow_events']}"
+    )
+    print(
+        f"  renegotiate: mean wait {reneg['newcomer_mean_wait_s']*1e3:8.2f}ms  "
+        f"max {reneg['newcomer_max_wait_s']*1e3:8.2f}ms  "
+        f"makespan {reneg['makespan_s']*1e3:8.2f}ms  overflow {reneg['overflow_events']}  "
+        f"re-plans {reneg['renegotiations']} "
+        f"({reneg['renegotiation_freed_bytes']/2**20:.1f}MiB freed, "
+        f"{reneg['renegotiation_solve_ms']:.1f}ms solve)"
+    )
+    print(
+        f"  added victim overhead {added_overhead*100:.2f}pp; "
+        f"reference bit-for-bit: {ok_ref}"
+    )
+    print(f"wrote {args.out}; acceptance: {report['acceptance']}")
+    return 0 if (ok_wait and ok_overflow and ok_victim and ok_ref) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

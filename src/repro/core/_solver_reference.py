@@ -1,15 +1,19 @@
-"""Frozen reference copies of the pre-fast-path solvers.
+"""Frozen reference copies of the pre-fast-path solvers and simulator.
 
-These are byte-for-byte behavioural pins, the same technique as the runtime
-engine's ``_reference_simulate`` (tests/test_runtime.py): the production
-solvers in ``core/smartpool.py`` and ``core/autoswap.py`` were rewritten for
+These are byte-for-byte behavioural pins: the production solvers in
+``core/smartpool.py`` and ``core/autoswap.py`` were rewritten for
 near-linear solve time, and every rewrite is validated against these copies —
 ``reference_solve`` placements must match bit-for-bit, reference SWDOA scores
 to float tolerance (the incremental rescore accumulates O(k*eps) rounding).
+``reference_simulate_swap_schedule`` is the pre-runtime event loop (one
+serialized out stream + one serialized in stream, eager prefetch) that the
+engine's 1-tenant/2-channel/eager path must reproduce exactly —
+``tests/test_runtime.py`` and ``benchmarks/bench_churn.py`` both pin
+against it.
 
-Do NOT edit this module when changing the production solvers; that would
-defeat the pin.  ``benchmarks/bench_solvetime.py`` also times these copies to
-report old-vs-new speedups.
+Do NOT edit this module when changing the production solvers or the runtime
+engine; that would defeat the pin.  ``benchmarks/bench_solvetime.py`` also
+times these copies to report old-vs-new speedups.
 """
 
 from __future__ import annotations
@@ -19,7 +23,7 @@ from typing import Literal, Sequence
 import numpy as np
 
 from .events import IterationTrace, VariableInfo
-from .simulator import HardwareSpec, assign_times
+from .simulator import HardwareSpec, SimResult, SwapDecision, assign_times
 
 
 # --------------------------------------------------------------- SmartPool
@@ -288,3 +292,109 @@ class ReferenceAutoSwapPlanner:
             elif r.overhead > 5 * tol and k > grid // 2:
                 break
         return best_limit, best_ov
+
+
+# ------------------------------------------------------------ swap simulator
+def reference_simulate_swap_schedule(
+    trace: IterationTrace,
+    decisions: Sequence[SwapDecision],
+    hw: HardwareSpec,
+    limit: int | None = None,
+) -> SimResult:
+    """Frozen copy of the pre-runtime ``simulate_swap_schedule`` event loop
+    (one serialized out stream + one serialized in stream, eager prefetch).
+    The engine's 1-tenant/2-channel/eager path must match it exactly."""
+    if trace.op_times is None:
+        assign_times(trace, hw)
+    times = trace.op_times
+    baseline = times[-1]
+    costs = trace.op_costs or {}
+
+    def op_dur(i):
+        flops, nbytes = costs.get(i, (0.0, 0.0))
+        if flops or nbytes:
+            return max(flops / hw.eff_flops, nbytes / hw.hbm_bw) + hw.op_overhead_s
+        return 0.0
+
+    out_at, in_at = {}, {}
+    for d in decisions:
+        out_at.setdefault(d.out_after, []).append(d)
+        in_at.setdefault(d.in_before, []).append(d)
+    delta = [0] * (trace.num_indices + 1)
+    malloc_size_at = {}
+    for v in trace.variables:
+        delta[v.alloc_index] += v.size
+        malloc_size_at[v.alloc_index] = v.size
+        if v.free_index <= trace.num_indices:
+            delta[v.free_index] -= v.size
+    transfer = lambda size: size / hw.link_bw
+    t = 0.0
+    resident = peak_resident = 0
+    out_stream_free = in_stream_free = 0.0
+    out_done, in_done = {}, {}
+    pending_outs = []
+    stalls = delayed = 0
+    res = SimResult(baseline_s=baseline, duration_s=0.0, peak_resident=0)
+    for d in decisions:
+        if d.wraps:
+            resident -= d.size
+            out_done[d.var] = 0.0
+    for i in range(trace.num_indices):
+        for d in in_at.get(i, ()):
+            if d.var not in in_done:
+                start = max(t, in_stream_free, out_done.get(d.var, 0.0))
+                end = start + transfer(d.size)
+                in_stream_free = end
+                in_done[d.var] = end
+                resident += d.size
+                res.in_events.append((d.var, start, end))
+            if in_done[d.var] > t:
+                stalls += 1
+                t = in_done[d.var]
+        if limit is not None and delta[i] > 0 and i in malloc_size_at:
+            while resident + delta[i] > limit and pending_outs:
+                pending_outs.sort()
+                done_t, var, size = pending_outs.pop(0)
+                if done_t > t:
+                    delayed += 1
+                    t = done_t
+                resident -= size
+        resident += delta[i]
+        peak_resident = max(peak_resident, resident)
+        t += op_dur(i)
+        for d in out_at.get(i, ()):
+            start = max(t, out_stream_free)
+            end = start + transfer(d.size)
+            out_stream_free = end
+            out_done[d.var] = end
+            pending_outs.append((end, d.var, d.size))
+            res.out_events.append((d.var, start, end))
+        still = []
+        for done_t, var, size in pending_outs:
+            if done_t <= t:
+                resident -= size
+            else:
+                still.append((done_t, var, size))
+        pending_outs = still
+        upcoming = sorted(
+            (d for d in decisions
+             if d.var in out_done and d.var not in in_done and d.in_before > i),
+            key=lambda d: d.in_before,
+        )
+        for d in upcoming:
+            need = transfer(d.size)
+            if limit is not None and resident + d.size > limit:
+                break
+            start = max(t, in_stream_free, out_done[d.var])
+            end = start + need
+            in_stream_free = end
+            in_done[d.var] = end
+            resident += d.size
+            peak_resident = max(peak_resident, resident)
+            res.in_events.append((d.var, start, end))
+    res.duration_s = t
+    res.tail_spill_s = max(0.0, out_stream_free - t)
+    res.peak_resident = peak_resident
+    res.stalls = stalls
+    res.delayed_mallocs = delayed
+    return res

@@ -7,13 +7,21 @@ pipeline, given a proportional share of the shared budget as its AutoSwap
 limit, and the tenants are co-scheduled over ``--channels`` DMA channels.
 
 Tenant specs are ``role`` or ``arch:role`` with roles ``train``, ``prefill``
-and ``decode``; plan-cache keys match the train/serve launchers exactly, so
-a plan solved by ``python -m repro.launch.serve --plan-cache DIR`` warm-starts
-colocation in this process and vice versa.
+and ``decode``, optionally suffixed ``@PRIORITY`` (SLO weight; renegotiation
+victims are picked lowest-priority first); plan-cache keys match the
+train/serve launchers exactly, so a plan solved by
+``python -m repro.launch.serve --plan-cache DIR`` warm-starts colocation in
+this process and vice versa.
+
+Churn: ``--arrivals`` staggers tenant entry ("0,0.002,0.005" positional, or
+"poisson:rate=500,seed=0"), ``--iterations`` runs each tenant N steps, and
+``--renegotiate`` lets the runtime shrink a running victim's plan (online
+SwapSelection re-solve) instead of only queueing a newcomer that doesn't fit.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.colocate --arch qwen3-4b --smoke \\
-      --tenants prefill,decode --budget-frac 0.8 --channels 2 \\
+      --tenants prefill,decode@2.0 --budget-frac 0.8 --channels 2 \\
+      [--arrivals poisson:rate=500] [--renegotiate] [--iterations 4] \\
       [--plan-cache /tmp/plans] [--json colocate.json]
 """
 
@@ -34,17 +42,23 @@ from repro.runtime import ColocationResult, colocate_programs
 SIZE_THRESHOLD = 1 << 18  # match serve.py: smoke models are far below 1 MiB
 
 
-def _parse_tenants(spec: str, default_arch: str) -> list[tuple[str, str]]:
+def _parse_tenants(spec: str, default_arch: str) -> list[tuple[str, str, float]]:
+    """``role`` | ``arch:role``, optional ``@PRIORITY`` suffix per tenant."""
     out = []
     for item in spec.split(","):
         item = item.strip()
         if not item:
             continue
+        item, _, prio = item.partition("@")
+        try:
+            priority = float(prio) if prio else 1.0
+        except ValueError:
+            raise SystemExit(f"bad tenant priority {prio!r} in {item!r}")
         arch, _, role = item.rpartition(":")
-        out.append((arch or default_arch, role))
+        out.append((arch or default_arch, role, priority))
     if not out:
         raise SystemExit("--tenants needs at least one role")
-    for arch, role in out:
+    for arch, role, _ in out:
         if role not in ("train", "prefill", "decode"):
             raise SystemExit(f"unknown tenant role {role!r} (train|prefill|decode)")
     return out
@@ -104,7 +118,8 @@ def print_colocation(result: ColocationResult) -> None:
     rep = result.report
     print(
         f"[runtime] budget {result.budget/2**20:.1f}MiB over {rep.channels} DMA "
-        f"channels on {rep.hardware}; makespan {rep.makespan_s*1000:.2f}ms"
+        f"channels on {rep.hardware} ({rep.policy}); "
+        f"makespan {rep.makespan_s*1000:.2f}ms"
     )
     for t in rep.tenants:
         if t.status != "completed":
@@ -114,11 +129,18 @@ def print_colocation(result: ColocationResult) -> None:
         iso_oh = f" (isolated {iso.overhead*100:.2f}%)" if iso else ""
         solve = result.plan_solve_ms.get(t.name)
         solve_s = f"  plan solve {solve:.1f}ms" if solve is not None else ""
+        arr = f"  arrived {t.arrival_t*1000:.2f}ms" if t.arrival_t else ""
+        reneg = (
+            f"  renegotiated x{t.renegotiations} "
+            f"(-{t.renegotiation_freed_bytes/2**20:.1f}MiB, "
+            f"re-solve {t.renegotiation_solve_ms:.1f}ms)"
+            if t.renegotiations else ""
+        )
         print(
             f"[runtime]   {t.name}: overhead {t.overhead*100:.2f}%{iso_oh}  "
             f"peak {t.peak_resident/2**20:.1f}MiB  stalls {t.stalls}  "
             f"delayed mallocs {t.delayed_mallocs}  "
-            f"queue wait {t.queue_wait_s*1000:.2f}ms{solve_s}"
+            f"queue wait {t.queue_wait_s*1000:.2f}ms{arr}{solve_s}{reneg}"
         )
     print(
         f"[runtime] aggregate peak {rep.aggregate_peak/2**20:.1f}MiB vs "
@@ -126,6 +148,13 @@ def print_colocation(result: ColocationResult) -> None:
         f"(sharing gain {result.sharing_gain*100:.1f}%); "
         f"over-budget events {rep.overflow_events}"
     )
+    if rep.renegotiations or rep.renegotiations_cancelled:
+        print(
+            f"[runtime] renegotiations: {rep.renegotiations} applied "
+            f"({rep.renegotiation_freed_bytes/2**20:.1f}MiB freed, "
+            f"{rep.renegotiation_solve_ms:.1f}ms re-solve), "
+            f"{rep.renegotiations_cancelled} cancelled"
+        )
 
 
 def main(argv=None):
@@ -145,6 +174,14 @@ def main(argv=None):
     ap.add_argument("--budget-gb", type=float, default=None,
                     help="absolute shared HBM budget (overrides --budget-frac)")
     ap.add_argument("--scorer", default="swdoa")
+    ap.add_argument("--iterations", type=int, default=1,
+                    help="iterations each tenant runs (renegotiation applies at barriers)")
+    ap.add_argument("--arrivals", default=None,
+                    help='tenant arrival times: "0,0.002,0.005" (positional) '
+                         'or "poisson:rate=500[,seed=0][,start=0]"')
+    ap.add_argument("--renegotiate", action="store_true",
+                    help="shrink a running victim's plan (online re-solve at its next "
+                         "iteration barrier) instead of only queueing a newcomer")
     ap.add_argument("--plan-cache", default=None,
                     help="plan artifact directory shared with the train/serve launchers")
     ap.add_argument("--cache-max-mb", type=float, default=None,
@@ -158,8 +195,9 @@ def main(argv=None):
         cache = PlanCache(args.plan_cache, max_bytes=max_bytes)
 
     programs = {}
+    priorities: dict[str, float] = {}
     planners: dict[tuple[str, str], MemoryPlanner] = {}
-    for arch, role in _parse_tenants(args.tenants, args.arch):
+    for arch, role, priority in _parse_tenants(args.tenants, args.arch):
         # Duplicate specs are distinct tenants (two decode workers on one
         # device) sharing one solved program — trace once, admit N times.
         if (arch, role) not in planners:
@@ -173,6 +211,16 @@ def main(argv=None):
         src = "restored from cache" if planner.from_cache else "solved"
         print(f"[plan] {name}: {src}  peak={planner.trace.peak_load()/2**20:.1f}MiB")
         programs[name] = planner.program
+        priorities[name] = priority
+
+    arrivals = None
+    if args.arrivals:
+        from repro.runtime.workload import parse_arrivals
+
+        times = parse_arrivals(args.arrivals, len(programs))
+        arrivals = dict(zip(programs, times))
+        for n, t in arrivals.items():
+            print(f"[churn] {n}: arrives at {t*1000:.2f}ms")
 
     result = colocate_programs(
         programs, TPU_V5E,
@@ -182,6 +230,10 @@ def main(argv=None):
         scorer=args.scorer,
         size_threshold=SIZE_THRESHOLD,
         cache=cache,
+        iterations=args.iterations,
+        arrivals=arrivals,
+        priorities=priorities,
+        renegotiate=args.renegotiate,
     )
     print_colocation(result)
     if args.json:

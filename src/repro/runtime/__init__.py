@@ -1,10 +1,14 @@
 """repro.runtime: the execution layer on top of the repro.plan IR.
 
   engine   — ChannelPool (K DMA channels), PoolAccountant (shared budget),
-             Tenant, MemoryRuntime (N-tenant discrete-event co-scheduler),
+             Tenant, MemoryRuntime (N-tenant event-driven co-scheduler with
+             arrival churn + preemptive floor renegotiation),
              simulate_program (the paper's simulator as a 1-tenant run)
   tenants  — tenant_from_program / colocate_programs: plan-pipeline +
-             PlanCache warm-start into the runtime
+             PlanCache warm-start into the runtime; pipeline_replanner is
+             the online re-solve hook renegotiation uses
+  workload — seeded Poisson / trace-driven workload generation for churn
+             experiments
 
 ``core.simulator.simulate_swap_schedule`` is now a thin 1-tenant/2-channel
 call into this engine; ``python -m repro.launch.colocate`` drives it from
@@ -21,7 +25,14 @@ from .engine import (
     planned_peak,
     simulate_program,
 )
-from .tenants import ColocationResult, colocate_programs, tenant_from_program
+from .tenants import (
+    ColocationResult,
+    colocate_programs,
+    pipeline_replanner,
+    proportional_shares,
+    tenant_from_program,
+)
+from .workload import WorkloadItem, parse_arrivals, poisson_workload, synthetic_train_trace
 
 __all__ = [
     "ChannelPool",
@@ -34,5 +45,11 @@ __all__ = [
     "simulate_program",
     "ColocationResult",
     "colocate_programs",
+    "pipeline_replanner",
+    "proportional_shares",
     "tenant_from_program",
+    "WorkloadItem",
+    "parse_arrivals",
+    "poisson_workload",
+    "synthetic_train_trace",
 ]

@@ -28,16 +28,32 @@ serialized in-stream never exposed).
 Admission control: a tenant whose resident floor (planned peak under its
 swap schedule) does not fit in the unreserved budget is queued FIFO, not
 OOM-killed; it starts when a finishing tenant releases its reservation.
+
+Dynamic churn: tenants carry an ``arrival_t`` (and optionally an open-ended
+iteration count bounded by a ``departure_t`` event), and the run loop is
+event-driven — arrivals are interleaved with execution in global-time order
+instead of being admitted from a fixed list at t=0.  With
+``renegotiate=True`` the runtime does not only queue a newcomer whose floor
+does not fit: it picks a running victim (lowest priority first, then the
+largest floor), re-solves the victim's swap plan at a lower HBM limit (the
+near-linear SwapSelection solve path, so this is cheap enough to do online),
+applies the shrunken plan at the victim's next iteration barrier, and admits
+the newcomer into the freed reservation.  When no victim can free enough
+bytes the newcomer falls back to plain FIFO queueing.
 """
 
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Callable, Sequence
 
 from ..core.events import IterationTrace
 from ..core.simulator import HardwareSpec, SimResult, SwapDecision, assign_times
+
+# A replanner re-solves one tenant's swap schedule at a new (lower) HBM
+# limit: (tenant, new_limit) -> (decisions, solve_wall_ms).
+Replanner = Callable[["Tenant", int], "tuple[list[SwapDecision], float]"]
 
 
 # ----------------------------------------------------------------- channels
@@ -134,6 +150,14 @@ class Tenant:
     limit: int | None = None
     floor: int | None = None
     iterations: int = 1
+    # Churn model: when this tenant enters the system (simulated seconds) and
+    # its SLO weight (victim selection prefers renegotiating lower-priority
+    # tenants first).  ``departure_t`` makes the iteration count open-ended:
+    # the tenant keeps iterating until its clock passes the departure event
+    # at an iteration barrier (``iterations`` is then ignored).
+    arrival_t: float = 0.0
+    priority: float = 1.0
+    departure_t: float | None = None
 
     def resident_floor(self) -> int:
         if self.floor is None:
@@ -143,18 +167,31 @@ class Tenant:
 
 def planned_peak(trace: IterationTrace, decisions: Sequence[SwapDecision]) -> int:
     """Peak of the load curve with the schedule's absence windows subtracted —
-    the minimum HBM a tenant needs resident if every transfer lands on time."""
-    curve = trace.load_curve()
-    n = len(curve)
+    the minimum HBM a tenant needs resident if every transfer lands on time.
+
+    Runs on the admission path (and renegotiation recomputes floors online),
+    so the absence windows are subtracted as a delta array folded into one
+    cumulative sum off the trace's memoized load curve — O(n + decisions)
+    instead of the former O(decisions x span) pure-Python walk.
+    """
+    import numpy as np
+
+    base = trace.load_curve_array()
+    n = int(base.shape[0])
+    if n == 0:
+        return 0
+    delta = np.zeros(n + 1, dtype=np.int64)
     for d in decisions:
         if d.wraps:
-            spans = (range(0, min(d.in_before, n)), range(min(d.out_after, n), n))
+            spans = ((0, min(d.in_before, n)), (min(d.out_after, n), n))
         else:
-            spans = (range(min(d.out_after, n), min(d.in_before, n)),)
-        for span in spans:
-            for i in span:
-                curve[i] -= d.size
-    return max(curve) if curve else 0
+            spans = ((min(d.out_after, n), min(d.in_before, n)),)
+        for a, b in spans:
+            if a < b:
+                delta[a] -= d.size
+                delta[b] += d.size
+    curve = base + np.cumsum(delta[:n])
+    return int(curve.max())
 
 
 @dataclass
@@ -180,15 +217,18 @@ class _TenantRun:
         self.trace = trace
         self.costs = trace.op_costs or {}
         self.baseline_s = trace.op_times[-1]
-        self.decisions = list(tenant.decisions)
         self.iterations = max(1, tenant.iterations)
         self.floor = tenant.resident_floor()
-
-        self.out_at: dict[int, list[SwapDecision]] = {}
-        self.in_at: dict[int, list[SwapDecision]] = {}
-        for d in self.decisions:
-            self.out_at.setdefault(d.out_after, []).append(d)
-            self.in_at.setdefault(d.in_before, []).append(d)
+        self.arrival_t = tenant.arrival_t
+        self.priority = tenant.priority
+        self.departure_t = tenant.departure_t
+        # Renegotiation: a (decisions, new_floor, solve_ms) triple staged by
+        # the engine, applied (or cancelled) at the next iteration barrier.
+        self.replan_pending: tuple[list[SwapDecision], int, float] | None = None
+        self.renegotiations = 0
+        self.reneg_freed_bytes = 0
+        self.reneg_solve_ms = 0.0
+        self._install_decisions(tenant.decisions)
 
         n = trace.num_indices
         self.delta = [0] * (n + 1)
@@ -215,6 +255,29 @@ class _TenantRun:
         self._begin_iteration()
 
     # ------------------------------------------------------------ plumbing
+    def _install_decisions(self, decisions: Sequence[SwapDecision]) -> None:
+        self.decisions = list(decisions)
+        self.out_at: dict[int, list[SwapDecision]] = {}
+        self.in_at: dict[int, list[SwapDecision]] = {}
+        for d in self.decisions:
+            self.out_at.setdefault(d.out_after, []).append(d)
+            self.in_at.setdefault(d.in_before, []).append(d)
+
+    def _iterations_done(self) -> bool:
+        """Called at an iteration barrier, after ``iter_no`` was bumped."""
+        if self.departure_t is not None:
+            # Zero-duration iterations can never reach a future departure:
+            # treat the first barrier as the departure to guarantee progress.
+            return self.t >= self.departure_t or self.baseline_s <= 0.0
+        return self.iter_no >= self.iterations
+
+    def has_future_barrier(self) -> bool:
+        """Will another iteration start after the current one finishes?  A
+        renegotiated plan can only take effect at such a barrier."""
+        if self.departure_t is not None:
+            return self.t < self.departure_t and self.baseline_s > 0.0
+        return self.iter_no + 1 < self.iterations
+
     def _transfer(self, size: int) -> float:
         return size / self.hw.link_bw
 
@@ -253,7 +316,7 @@ class _TenantRun:
     def _end_iteration(self) -> bool:
         """Close one iteration; True when the whole tenant is finished."""
         self.iter_no += 1
-        if self.iter_no >= self.iterations:
+        if self._iterations_done():
             return True
         # Iteration barrier for multi-iteration replay: drain this tenant's
         # in-flight transfers and reset its residency to zero so the next
@@ -267,6 +330,10 @@ class _TenantRun:
         if self.in_done:
             self.t = max(self.t, max(self.in_done.values()))
         acct.add(self.name, -acct.resident.get(self.name, 0))
+        # The barrier is the only point where the resident set is empty, so a
+        # staged renegotiation (shrunken swap plan) swaps in here.
+        if self.replan_pending is not None:
+            self.engine._on_barrier(self)
         self._begin_iteration()
         return False
 
@@ -374,17 +441,25 @@ class _TenantRun:
 
     # ------------------------------------------------------------- results
     def sim_result(self) -> SimResult:
+        # Tail spill is *this tenant's* swap-out traffic draining past its
+        # compute end — derived from its own out events.  The shared
+        # ``channels.drain_time("out")`` would charge other tenants'
+        # in-flight swap-outs to this tenant.
+        own_out_end = max((e for _, _, e, _ in self.out_events), default=self.t)
         res = SimResult(
-            baseline_s=self.baseline_s * self.iterations,
+            baseline_s=self.baseline_s * self.completed_iterations(),
             duration_s=self.t - self.admit_t,
             peak_resident=self.engine.acct.peak.get(self.name, 0),
             stalls=self.stalls,
             delayed_mallocs=self.delayed,
-            tail_spill_s=max(0.0, self.engine.channels.drain_time("out") - self.t),
+            tail_spill_s=max(0.0, own_out_end - self.t),
             out_events=[(v, s, e) for v, s, e, _ in self.out_events],
             in_events=[(v, s, e) for v, s, e, _ in self.in_events],
         )
         return res
+
+    def completed_iterations(self) -> int:
+        return max(1, self.iter_no if self.finished else self.iterations)
 
 
 # ------------------------------------------------------------------ reports
@@ -396,12 +471,21 @@ class TenantReport:
     duration_s: float               # compute span, excluding queue wait
     overhead: float
     peak_resident: int
-    floor: int
+    floor: int                      # reservation at finish (after any shrink)
     stalls: int
     delayed_mallocs: int
     admitted_at: float
     finished_at: float
-    queue_wait_s: float
+    queue_wait_s: float             # admitted_at - arrival_t
+    arrival_t: float = 0.0
+    priority: float = 1.0
+    iterations: int = 1
+    # Times this tenant was the renegotiation victim (plan re-solved at a
+    # lower limit and applied at a barrier), the reservation bytes it gave
+    # up, and the wall-clock spent in those online re-solves.
+    renegotiations: int = 0
+    renegotiation_freed_bytes: int = 0
+    renegotiation_solve_ms: float = 0.0
 
     def as_dict(self) -> dict:
         return self.__dict__.copy()
@@ -416,6 +500,11 @@ class RuntimeReport:
     aggregate_peak: int
     overflow_events: int
     makespan_s: float
+    policy: str = "fifo"            # "fifo" | "renegotiate"
+    renegotiations: int = 0         # applied victim re-plans
+    renegotiations_cancelled: int = 0   # staged but nobody waited at barrier
+    renegotiation_freed_bytes: int = 0
+    renegotiation_solve_ms: float = 0.0
 
     def tenant(self, name: str) -> TenantReport:
         for t in self.tenants:
@@ -432,12 +521,27 @@ class RuntimeReport:
             "aggregate_peak": self.aggregate_peak,
             "overflow_events": self.overflow_events,
             "makespan_s": self.makespan_s,
+            "policy": self.policy,
+            "renegotiations": self.renegotiations,
+            "renegotiations_cancelled": self.renegotiations_cancelled,
+            "renegotiation_freed_bytes": self.renegotiation_freed_bytes,
+            "renegotiation_solve_ms": self.renegotiation_solve_ms,
         }
 
 
 # ------------------------------------------------------------------- engine
 class MemoryRuntime:
-    """Co-schedules N tenant programs over K DMA channels under one budget."""
+    """Co-schedules N tenant programs over K DMA channels under one budget.
+
+    The run loop is event-driven: tenants enter at their ``arrival_t`` and
+    are admitted when their resident floor fits the unreserved budget; the
+    rest wait FIFO.  With ``renegotiate=True`` a waiting newcomer triggers
+    preemptive floor renegotiation of a running victim (see ``Tenant``):
+    ``replanner(tenant, new_limit)`` re-solves the victim's swap schedule,
+    and the shrunken plan takes effect at the victim's next iteration
+    barrier.  ``replanner`` defaults to the plan pipeline's SwapSelection
+    pass (``repro.runtime.tenants.pipeline_replanner``).
+    """
 
     def __init__(
         self,
@@ -445,6 +549,10 @@ class MemoryRuntime:
         budget: int | None = None,
         channels: int = 2,
         prefetch: str = "backsched",
+        renegotiate: bool = False,
+        replanner: Replanner | None = None,
+        replan_scorer: str = "swdoa",
+        replan_size_threshold: int = 1 << 20,
     ):
         if prefetch not in ("backsched", "eager"):
             raise ValueError(f"unknown prefetch policy {prefetch!r}")
@@ -452,10 +560,172 @@ class MemoryRuntime:
         self.budget = budget
         self.num_channels = channels
         self.prefetch = prefetch
+        self.renegotiate = renegotiate
+        self.replanner = replanner
+        self.replan_scorer = replan_scorer
+        self.replan_size_threshold = replan_size_threshold
         self.channels = ChannelPool.make(channels)
         self.acct = PoolAccountant(budget)
         self.pending_outs: list[_PendingOut] = []
         self.runs: dict[str, _TenantRun] = {}
+        # Run-loop state (owned by run(); instance-level so _TenantRun
+        # barrier callbacks can reach it).
+        self._arrivals: deque[Tenant] = deque()
+        self._waiting: deque[Tenant] = deque()
+        self._running: list[_TenantRun] = []
+        self._reports: dict[str, TenantReport] = {}
+        self._reserved = 0
+        self._promised = 0       # bytes staged replans will free at barriers
+        self._now = 0.0
+        self._reneg_applied = 0
+        self._reneg_cancelled = 0
+        self._reneg_freed = 0
+        self._reneg_solve_ms = 0.0
+
+    # -------------------------------------------------------- admission path
+    def _unschedulable(self, cand: Tenant, floor: int) -> None:
+        self._reports[cand.name] = TenantReport(
+            name=cand.name, status="unschedulable", baseline_s=0.0,
+            duration_s=0.0, overhead=0.0, peak_resident=0, floor=floor,
+            stalls=0, delayed_mallocs=0, admitted_at=-1.0,
+            finished_at=-1.0, queue_wait_s=0.0, arrival_t=cand.arrival_t,
+            priority=cand.priority, iterations=cand.iterations,
+        )
+
+    def _try_admit(self, clock: float) -> None:
+        """Admit waiting tenants FIFO while their floors fit; ``clock`` is
+        the simulated time of the event that may have freed reservation."""
+        while self._waiting:
+            cand = self._waiting[0]
+            floor = cand.resident_floor()
+            if self.budget is not None and floor > self.budget:
+                # Can never fit, even alone: report, do not OOM-kill others.
+                self._waiting.popleft()
+                self._unschedulable(cand, floor)
+                continue
+            if self.budget is not None and self._reserved + floor > self.budget:
+                return  # FIFO: head-of-line waits for floor to free up
+            self._waiting.popleft()
+            self._reserved += floor
+            run = _TenantRun(cand, self.hw, self, admit_t=max(clock, cand.arrival_t))
+            self.runs[cand.name] = run
+            self._running.append(run)
+
+    def _drain_arrivals(self, upto: float) -> None:
+        """Move arrivals with ``arrival_t <= upto`` into the admission queue,
+        in arrival order, admitting (or staging renegotiation) as they land."""
+        while self._arrivals and self._arrivals[0].arrival_t <= upto:
+            cand = self._arrivals.popleft()
+            self._waiting.append(cand)
+            self._try_admit(cand.arrival_t)
+            self._maybe_renegotiate()
+
+    # --------------------------------------------------------- renegotiation
+    def _replan(self, tenant: Tenant, new_limit: int) -> tuple[list[SwapDecision], float]:
+        if self.replanner is None:
+            from .tenants import pipeline_replanner  # deferred: tenants imports engine
+
+            self.replanner = pipeline_replanner(
+                self.hw, scorer=self.replan_scorer,
+                size_threshold=self.replan_size_threshold,
+            )
+        return self.replanner(tenant, new_limit)
+
+    def _maybe_renegotiate(self) -> None:
+        """If the head-of-line waiter doesn't fit, stage a victim re-plan.
+
+        Victim order: lowest priority first, then largest floor (most bytes
+        to reclaim).  A victim must have a future iteration barrier — the
+        only point a shrunken plan can take effect — and only one staged
+        re-plan at a time.  Falls back to FIFO queueing when no single
+        victim can free enough.
+        """
+        if not self.renegotiate or self.budget is None or not self._waiting:
+            return
+        head = self._waiting[0]
+        floor = head.resident_floor()
+        if floor > self.budget:
+            return  # unschedulable; _try_admit reports it
+        needed = self._reserved - self._promised + floor - self.budget
+        if needed <= 0:
+            return  # staged re-plans already free enough; wait for barriers
+        victims = [
+            r for r in self._running
+            if r.replan_pending is None and r.has_future_barrier()
+        ]
+        victims.sort(key=lambda r: (r.priority, -r.floor, r.name))
+        for v in victims:
+            new_limit = v.floor - needed
+            if new_limit <= 0:
+                continue
+            decisions, solve_ms = self._replan(v.tenant, new_limit)
+            new_floor = planned_peak(v.trace, decisions)
+            if new_floor > new_limit:
+                continue  # solver could not push the floor low enough
+            v.replan_pending = (list(decisions), new_floor, solve_ms)
+            self._promised += v.floor - new_floor
+            return
+
+    def _on_barrier(self, run: _TenantRun) -> None:
+        """Iteration barrier of a victim with a staged re-plan (called from
+        ``_end_iteration`` with the victim's residency already drained)."""
+        # Arrivals up to the barrier precede it; process them first so the
+        # apply-or-cancel decision sees the true waiting queue at this time.
+        self._drain_arrivals(run.t)
+        staged = run.replan_pending
+        if staged is None:  # applied recursively while draining
+            return
+        decisions, new_floor, solve_ms = staged
+        run.replan_pending = None
+        freed = run.floor - new_floor
+        self._promised -= freed
+        if not self._waiting:
+            # Nobody waits anymore (a finish admitted them): keep the
+            # better plan, don't shrink for no one.
+            self._reneg_cancelled += 1
+            return
+        run._install_decisions(decisions)
+        run.floor = new_floor
+        self._reserved -= freed
+        run.renegotiations += 1
+        run.reneg_freed_bytes += freed
+        run.reneg_solve_ms += solve_ms
+        self._reneg_applied += 1
+        self._reneg_freed += freed
+        self._reneg_solve_ms += solve_ms
+        self._try_admit(run.t)
+        self._maybe_renegotiate()
+
+    # -------------------------------------------------------------- run loop
+    def _finish(self, run: _TenantRun) -> None:
+        self._running.remove(run)
+        self._reserved -= run.floor
+        if run.replan_pending is not None:
+            # Departure beat the barrier: the staged shrink never applied.
+            _, new_floor, _ = run.replan_pending
+            self._promised -= run.floor - new_floor
+            run.replan_pending = None
+            self._reneg_cancelled += 1
+        run.release_residency()
+        self._now = max(self._now, run.t)
+        dur = run.t - run.admit_t
+        base = run.baseline_s * run.completed_iterations()
+        self._reports[run.name] = TenantReport(
+            name=run.name, status="completed", baseline_s=base,
+            duration_s=dur,
+            overhead=max(0.0, (dur - base) / base) if base > 0 else 0.0,
+            peak_resident=self.acct.peak.get(run.name, 0),
+            floor=run.floor, stalls=run.stalls,
+            delayed_mallocs=run.delayed, admitted_at=run.admit_t,
+            finished_at=run.t, queue_wait_s=run.admit_t - run.arrival_t,
+            arrival_t=run.arrival_t, priority=run.priority,
+            iterations=run.completed_iterations(),
+            renegotiations=run.renegotiations,
+            renegotiation_freed_bytes=run.reneg_freed_bytes,
+            renegotiation_solve_ms=run.reneg_solve_ms,
+        )
+        self._try_admit(run.t)
+        self._maybe_renegotiate()
 
     def run(self, tenants: Sequence[Tenant]) -> RuntimeReport:
         names = [t.name for t in tenants]
@@ -463,58 +733,41 @@ class MemoryRuntime:
             # The accountant, runs map and reports are keyed by name; two
             # tenants sharing one would silently merge their residency.
             raise ValueError(f"tenant names must be unique, got {names}")
-        queue: deque[Tenant] = deque(tenants)
-        running: list[_TenantRun] = []
-        reports: dict[str, TenantReport] = {}
-        order = [t.name for t in tenants]
-        reserved = 0
-        now = 0.0
+        order = names
+        # Stable sort: same-instant arrivals keep submission (FIFO) order.
+        self._arrivals = deque(sorted(tenants, key=lambda t: t.arrival_t))
+        self._waiting.clear()
+        self._running = []
+        self._reports = {}
+        self._reserved = 0
+        self._promised = 0
+        self._now = 0.0
 
-        def try_admit() -> None:
-            nonlocal reserved
-            while queue:
-                cand = queue[0]
-                floor = cand.resident_floor()
-                if self.budget is not None and floor > self.budget:
-                    # Can never fit, even alone: report, do not OOM-kill others.
-                    queue.popleft()
-                    reports[cand.name] = TenantReport(
-                        name=cand.name, status="unschedulable", baseline_s=0.0,
-                        duration_s=0.0, overhead=0.0, peak_resident=0, floor=floor,
-                        stalls=0, delayed_mallocs=0, admitted_at=-1.0,
-                        finished_at=-1.0, queue_wait_s=0.0,
-                    )
-                    continue
-                if self.budget is not None and reserved + floor > self.budget:
-                    return  # FIFO: wait for a running tenant to release floor
-                queue.popleft()
-                reserved += floor
-                run = _TenantRun(cand, self.hw, self, admit_t=now)
-                self.runs[cand.name] = run
-                running.append(run)
-
-        try_admit()
-        while running:
-            run = min(running, key=lambda r: r.t)
+        while self._arrivals or self._waiting or self._running:
+            if not self._running:
+                if self._arrivals:
+                    # Idle gap: jump the clock to the next arrival.
+                    self._drain_arrivals(self._arrivals[0].arrival_t)
+                else:
+                    # Waiting only: nothing is reserved, so the head either
+                    # admits now or is unschedulable outright.
+                    self._try_admit(self._now)
+                continue
+            run = min(self._running, key=lambda r: r.t)
+            # Arrivals at or before this run's clock strictly precede its
+            # next op (and may admit a tenant with an earlier clock).
+            before = len(self._running)
+            self._drain_arrivals(run.t)
+            if len(self._running) != before:
+                continue  # the time frontier changed; re-pick the next event
             if run.step():
-                running.remove(run)
-                reserved -= run.floor
-                run.release_residency()
-                now = max(now, run.t)
-                dur = run.t - run.admit_t
-                base = run.baseline_s * run.iterations
-                reports[run.name] = TenantReport(
-                    name=run.name, status="completed", baseline_s=base,
-                    duration_s=dur,
-                    overhead=max(0.0, (dur - base) / base) if base > 0 else 0.0,
-                    peak_resident=self.acct.peak.get(run.name, 0),
-                    floor=run.floor, stalls=run.stalls,
-                    delayed_mallocs=run.delayed, admitted_at=run.admit_t,
-                    finished_at=run.t, queue_wait_s=run.admit_t,
-                )
-                try_admit()
+                # Process arrivals that landed inside the op the step just
+                # executed *before* exposing the freed reservation: the
+                # release happens at run.t, after those arrivals.
+                self._drain_arrivals(run.t)
+                self._finish(run)
 
-        ordered = [reports[n] for n in order if n in reports]
+        ordered = [self._reports[n] for n in order if n in self._reports]
         return RuntimeReport(
             hardware=self.hw.name,
             budget=self.budget,
@@ -522,7 +775,12 @@ class MemoryRuntime:
             tenants=ordered,
             aggregate_peak=self.acct.aggregate_peak,
             overflow_events=self.acct.overflow_events,
-            makespan_s=now,
+            makespan_s=self._now,
+            policy="renegotiate" if self.renegotiate else "fifo",
+            renegotiations=self._reneg_applied,
+            renegotiations_cancelled=self._reneg_cancelled,
+            renegotiation_freed_bytes=self._reneg_freed,
+            renegotiation_solve_ms=self._reneg_solve_ms,
         )
 
 

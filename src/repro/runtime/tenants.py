@@ -32,6 +32,9 @@ def tenant_from_program(
     size_threshold: int = 1 << 20,
     cache=None,
     iterations: int = 1,
+    arrival_t: float = 0.0,
+    priority: float = 1.0,
+    departure_t: float | None = None,
 ) -> Tenant:
     """Solve (or restore) the program's swap schedule at `limit` and wrap it
     as a runtime tenant.  Newly-solved results persist when `cache` is set."""
@@ -47,7 +50,53 @@ def tenant_from_program(
         decisions=list(summary.decisions),
         limit=limit,
         iterations=iterations,
+        arrival_t=arrival_t,
+        priority=priority,
+        departure_t=departure_t,
     )
+
+
+def pipeline_replanner(
+    hw: HardwareSpec,
+    scorer: str = "swdoa",
+    size_threshold: int = 1 << 20,
+    cache=None,
+    programs: "dict[str, MemoryProgram] | None" = None,
+):
+    """Online re-solve hook for ``MemoryRuntime(renegotiate=True)``.
+
+    Returns ``replan(tenant, new_limit) -> (decisions, solve_wall_ms)``
+    running the plan pipeline's SwapSelection pass — the near-linear solve
+    path, so renegotiating at admission time is cheap.  When ``programs``
+    maps tenant names to their ``MemoryProgram``s (as in
+    ``colocate_programs``), re-solves reuse each program's memoized planner
+    (rankings are shared across limits) and persist to ``cache``; otherwise
+    a program is wrapped around the tenant's trace on first use.
+    """
+    progs: dict[str, MemoryProgram] = dict(programs or {})
+
+    def replan(tenant: Tenant, new_limit: int) -> tuple[list, float]:
+        program = progs.get(tenant.name)
+        if program is None:
+            program = MemoryProgram.from_trace(tenant.trace)
+            progs[tenant.name] = program
+        ctx = PassContext(
+            hw=hw, cache=cache, key=program.key, size_threshold=size_threshold
+        )
+        passes = [TimingAssign(), SwapSelection(limit=new_limit, scorer=scorer)]
+        if cache is not None and program.key is not None:
+            passes.append(ArtifactSave())
+        # Time this call, not program.solve_ms[...]: when SwapSelection hits
+        # its memoized summary (same limit re-staged after a cancelled
+        # renegotiation) the stored figure is the *original* solve's wall
+        # time, which this replan did not spend.
+        t0 = time.perf_counter()
+        program = Pipeline(passes).run(program, ctx)
+        ms = (time.perf_counter() - t0) * 1e3
+        k = swap_key(scorer, new_limit)
+        return list(program.swap_summaries[k].decisions), ms
+
+    return replan
 
 
 @dataclass
@@ -69,6 +118,9 @@ class ColocationResult:
     # ~0): plans are solved online when a tenant is admitted, so solve
     # latency is part of the serving path and reported next to overhead.
     plan_solve_ms: dict[str, float] = field(default_factory=dict)
+    # Budget share each tenant's plan was solved at (largest-remainder
+    # proportional split: shares sum to the budget before peak clamping).
+    shares: dict[str, int] = field(default_factory=dict)
 
     @property
     def sum_isolated_peaks(self) -> int:
@@ -93,6 +145,7 @@ class ColocationResult:
             "aggregate_peak": self.report.aggregate_peak,
             "sharing_gain": self.sharing_gain,
             "natural_peaks": dict(self.natural_peaks),
+            "shares": dict(self.shares),
             "plan_solve_ms": {n: round(v, 3) for n, v in self.plan_solve_ms.items()},
             "runtime": self.report.as_dict(),
             "isolated": {
@@ -106,6 +159,22 @@ class ColocationResult:
         }
 
 
+def proportional_shares(peaks: dict[str, int], budget: int) -> dict[str, int]:
+    """Split ``budget`` proportionally to ``peaks`` with largest-remainder
+    rounding, so the granted shares sum exactly to the budget (plain integer
+    truncation silently withholds up to N-1 bytes)."""
+    names = list(peaks)
+    total = sum(peaks.values())
+    if not names or total <= 0:
+        return {n: budget for n in names}
+    shares = {n: budget * peaks[n] // total for n in names}
+    leftover = budget - sum(shares.values())
+    by_remainder = sorted(names, key=lambda n: (-((budget * peaks[n]) % total), n))
+    for n in by_remainder[:leftover]:
+        shares[n] += 1
+    return shares
+
+
 def colocate_programs(
     named_programs: dict[str, MemoryProgram],
     hw: HardwareSpec,
@@ -116,27 +185,42 @@ def colocate_programs(
     size_threshold: int = 1 << 20,
     cache=None,
     iterations: int = 1,
+    arrivals: "dict[str, float] | None" = None,
+    priorities: "dict[str, float] | None" = None,
+    departures: "dict[str, float] | None" = None,
+    renegotiate: bool = False,
 ) -> ColocationResult:
     """Co-schedule N solved programs under one shared HBM budget.
 
     The budget defaults to ``budget_frac`` of the sum of isolated peak loads;
     each tenant's swap schedule is solved at its proportional share (clamped
     to its trace peak so an under-committed tenant gets a no-op schedule).
+
+    Churn: ``arrivals``/``priorities``/``departures`` map tenant names to
+    their arrival time, SLO weight, and optional open-ended departure event;
+    ``renegotiate=True`` lets the runtime shrink a running victim's plan (an
+    online SwapSelection re-solve through this same pipeline and ``cache``)
+    instead of only queueing a newcomer that doesn't fit.
     """
+    arrivals = arrivals or {}
+    priorities = priorities or {}
+    departures = departures or {}
     peaks = {n: p.require_trace().peak_load() for n, p in named_programs.items()}
     total = sum(peaks.values())
     if budget is None:
         budget = int(total * budget_frac)
+    shares = proportional_shares(peaks, budget)
     tenants = []
     plan_solve_ms: dict[str, float] = {}
     for n, p in named_programs.items():
-        share = int(budget * peaks[n] / total) if total else budget
-        share = min(share, peaks[n])
+        share = min(shares[n], peaks[n])
         t0 = time.perf_counter()
         tenants.append(
             tenant_from_program(
                 n, p, hw, share, scorer=scorer,
                 size_threshold=size_threshold, cache=cache, iterations=iterations,
+                arrival_t=arrivals.get(n, 0.0), priority=priorities.get(n, 1.0),
+                departure_t=departures.get(n),
             )
         )
         plan_solve_ms[n] = (time.perf_counter() - t0) * 1e3
@@ -144,9 +228,15 @@ def colocate_programs(
         t.name: simulate_program(t.trace, t.decisions, hw, t.limit, channels=channels)
         for t in tenants
     }
-    rt = MemoryRuntime(hw, budget=budget, channels=channels)
+    rt = MemoryRuntime(
+        hw, budget=budget, channels=channels, renegotiate=renegotiate,
+        replanner=pipeline_replanner(
+            hw, scorer=scorer, size_threshold=size_threshold, cache=cache,
+            programs=named_programs,
+        ),
+    )
     report = rt.run(tenants)
     return ColocationResult(
         report=report, budget=budget, isolated=isolated, natural_peaks=peaks,
-        plan_solve_ms=plan_solve_ms,
+        plan_solve_ms=plan_solve_ms, shares=shares,
     )

@@ -1,0 +1,320 @@
+"""Dynamic tenant churn: arrivals, renegotiation, and attribution fixes.
+
+Covers the churn tentpole and its satellites:
+  * seeded workload generation is reproducible (same seed, same workload);
+  * ``queue_wait_s``/``admitted_at`` are pinned against explicit arrival
+    times (waits are measured from ``arrival_t``, not from t=0);
+  * with renegotiation disabled — or unable to create room — the runtime is
+    byte-for-byte the FIFO-queue baseline;
+  * renegotiation admits a blocked newcomer earlier by shrinking a running
+    victim at its iteration barrier, with the victim picked lowest-priority
+    first and all budget invariants intact;
+  * the 1-tenant ``simulate_program`` path stays bit-for-bit equal to the
+    frozen pre-runtime reference simulator;
+  * ``tail_spill_s`` is attributed per tenant (not the global out-channel
+    drain) and colocation shares use largest-remainder rounding.
+"""
+
+import pytest
+
+from repro.core._solver_reference import reference_simulate_swap_schedule
+from repro.core.autoswap import AutoSwapPlanner
+from repro.core.events import IterationTrace, VariableInfo
+from repro.core.simulator import HardwareSpec, SwapDecision
+from repro.plan import MemoryProgram
+from repro.runtime import (
+    MemoryRuntime,
+    Tenant,
+    colocate_programs,
+    planned_peak,
+    poisson_workload,
+    proportional_shares,
+    simulate_program,
+    synthetic_train_trace,
+)
+from repro.runtime.workload import parse_arrivals
+
+HW = HardwareSpec("test", peak_flops=1e12, hbm_bw=1e12, link_bw=1e10, efficiency=1.0)
+MB = 1 << 20
+
+
+def solved_tenant(name, layers=8, frac=0.7, **kw):
+    tr = synthetic_train_trace(layers)
+    pl = AutoSwapPlanner(tr, HW, size_threshold=1 << 20)
+    limit = int(pl.peak_load * frac)
+    return Tenant(name, tr, pl.select(limit, "swdoa"), limit=limit, **kw)
+
+
+# ----------------------------------------------------------------- workload
+def test_poisson_workload_reproducible_by_seed():
+    a = poisson_workload(["s", "m"], 16, 200.0, seed=7, iterations=(1, 4),
+                         priorities=(0.5, 1.0, 2.0))
+    b = poisson_workload(["s", "m"], 16, 200.0, seed=7, iterations=(1, 4),
+                         priorities=(0.5, 1.0, 2.0))
+    assert a == b, "same seed must reproduce the workload bit-for-bit"
+    c = poisson_workload(["s", "m"], 16, 200.0, seed=8, iterations=(1, 4),
+                         priorities=(0.5, 1.0, 2.0))
+    assert a != c, "different seeds must differ"
+    assert all(x.arrival_t < y.arrival_t for x, y in zip(a, a[1:]))
+    assert all(1 <= x.iterations <= 4 for x in a)
+
+
+def test_parse_arrivals_explicit_and_poisson():
+    assert parse_arrivals("0, 0.002, 0.005", 3) == [0.0, 0.002, 0.005]
+    with pytest.raises(ValueError, match="3 times for 2 tenants"):
+        parse_arrivals("0,0.1,0.2", 2)
+    p1 = parse_arrivals("poisson:rate=500,seed=3", 5)
+    p2 = parse_arrivals("poisson:rate=500,seed=3", 5)
+    assert p1 == p2 and len(p1) == 5
+    assert all(a < b for a, b in zip(p1, p1[1:]))
+    with pytest.raises(ValueError, match="bad poisson arrival parameter"):
+        parse_arrivals("poisson:bogus=1", 2)
+
+
+# ---------------------------------------------------------- arrival accounting
+def test_queue_wait_pinned_to_arrival_when_fitting():
+    """A newcomer whose floor fits is admitted at its arrival instant and
+    waits zero — today's t=0 assumption (queue_wait = admit_t) would report
+    the arrival time itself as wait."""
+    a = solved_tenant("A", layers=8, iterations=2)
+    b = solved_tenant("B", layers=4, iterations=1, arrival_t=0.005)
+    budget = planned_peak(a.trace, a.decisions) + planned_peak(b.trace, b.decisions)
+    rep = MemoryRuntime(HW, budget=budget, channels=2).run([a, b])
+    tb = rep.tenant("B")
+    assert tb.arrival_t == 0.005
+    assert tb.admitted_at == 0.005
+    assert tb.queue_wait_s == 0.0
+
+
+def test_queue_wait_pinned_to_release_when_blocked():
+    """A blocked newcomer is admitted exactly when the running tenant
+    finishes; its wait is measured from its own arrival."""
+    a = solved_tenant("A", layers=8, iterations=2)
+    b = solved_tenant("B", layers=8, iterations=1, arrival_t=0.004)
+    floor_a = planned_peak(a.trace, a.decisions)
+    floor_b = planned_peak(b.trace, b.decisions)
+    budget = floor_a + floor_b - 1  # B cannot fit while A runs
+    rep = MemoryRuntime(HW, budget=budget, channels=2).run([a, b])
+    ta, tb = rep.tenant("A"), rep.tenant("B")
+    assert tb.admitted_at == ta.finished_at
+    assert tb.queue_wait_s == pytest.approx(ta.finished_at - 0.004, abs=0.0)
+    assert tb.queue_wait_s > 0.0
+
+
+def test_arrival_during_idle_gap_starts_at_arrival():
+    """With nothing running, the clock jumps to the arrival event."""
+    t = solved_tenant("late", layers=4, arrival_t=1.5)
+    rep = MemoryRuntime(HW, channels=2).run([t])
+    tr = rep.tenant("late")
+    assert tr.admitted_at == 1.5 and tr.queue_wait_s == 0.0
+    assert tr.finished_at > 1.5
+    assert rep.makespan_s == tr.finished_at
+
+
+# ------------------------------------------------- renegotiation vs queueing
+def churn_pair(arrival=0.005):
+    """A long-running victim + a newcomer that doesn't fit beside it."""
+    a = solved_tenant("A", layers=12, frac=0.8, iterations=6, priority=0.5)
+    b = solved_tenant("B", layers=6, frac=0.7, iterations=2, arrival_t=arrival)
+    floor_a = planned_peak(a.trace, a.decisions)
+    floor_b = planned_peak(b.trace, b.decisions)
+    budget = floor_a + floor_b // 2
+    return a, b, budget
+
+
+def fresh(t: Tenant) -> Tenant:
+    return Tenant(t.name, t.trace, list(t.decisions), limit=t.limit,
+                  iterations=t.iterations, arrival_t=t.arrival_t,
+                  priority=t.priority, departure_t=t.departure_t)
+
+
+def run_pair(a, b, budget, **kw):
+    rt = MemoryRuntime(HW, budget=budget, channels=2,
+                       replan_size_threshold=1 << 20, **kw)
+    return rt.run([fresh(a), fresh(b)])
+
+
+def test_renegotiation_admits_newcomer_earlier():
+    a, b, budget = churn_pair()
+    fifo = run_pair(a, b, budget, renegotiate=False)
+    reneg = run_pair(a, b, budget, renegotiate=True)
+    assert fifo.policy == "fifo" and reneg.policy == "renegotiate"
+    assert reneg.tenant("B").queue_wait_s < fifo.tenant("B").queue_wait_s
+    victim = reneg.tenant("A")
+    assert victim.renegotiations == 1
+    assert victim.renegotiation_freed_bytes > 0
+    assert victim.floor < fifo.tenant("A").floor, "victim reservation shrank"
+    assert reneg.renegotiations == 1
+    assert reneg.renegotiation_freed_bytes == victim.renegotiation_freed_bytes
+    # Invariants survive the shrink.
+    assert reneg.overflow_events == 0
+    assert reneg.aggregate_peak <= budget
+
+
+def test_renegotiation_disabled_matches_fifo_exactly():
+    """The event-driven engine with renegotiate=False IS the FIFO baseline."""
+    a, b, budget = churn_pair()
+    r1 = run_pair(a, b, budget, renegotiate=False).as_dict()
+    r2 = run_pair(a, b, budget, renegotiate=False).as_dict()
+    assert r1 == r2, "FIFO runs are deterministic"
+
+
+def test_failed_renegotiation_falls_back_to_fifo():
+    """A replanner that cannot free any bytes must leave the run identical
+    to plain FIFO queueing (modulo the policy label)."""
+    a, b, budget = churn_pair()
+    fifo = run_pair(a, b, budget, renegotiate=False).as_dict()
+    noop = run_pair(a, b, budget, renegotiate=True,
+                    replanner=lambda tenant, new_limit: (list(tenant.decisions), 0.0))
+    noop_d = noop.as_dict()
+    assert noop.renegotiations == 0
+    fifo.pop("policy"), noop_d.pop("policy")
+    assert noop_d == fifo
+
+
+def test_victim_selection_prefers_lowest_priority():
+    lo = solved_tenant("lo", layers=10, frac=0.8, iterations=6, priority=0.5)
+    hi = solved_tenant("hi", layers=10, frac=0.8, iterations=6, priority=2.0)
+    new = solved_tenant("new", layers=6, frac=0.7, iterations=1, arrival_t=0.005)
+    floors = {t.name: planned_peak(t.trace, t.decisions) for t in (lo, hi, new)}
+    budget = floors["lo"] + floors["hi"] + floors["new"] // 2
+    rt = MemoryRuntime(HW, budget=budget, channels=2, renegotiate=True,
+                       replan_size_threshold=1 << 20)
+    rep = rt.run([fresh(lo), fresh(hi), fresh(new)])
+    assert rep.tenant("lo").renegotiations == 1, "lowest priority is the victim"
+    assert rep.tenant("hi").renegotiations == 0
+    assert rep.overflow_events == 0
+
+
+def test_departure_bounds_open_ended_tenant():
+    t = solved_tenant("open", layers=4, iterations=1)
+    one = MemoryRuntime(HW, channels=2).run([fresh(t)])
+    iter_s = one.tenant("open").finished_at
+    t2 = fresh(t)
+    t2.departure_t = 2.5 * iter_s
+    rep = MemoryRuntime(HW, channels=2).run([t2])
+    r = rep.tenant("open")
+    assert r.iterations == 3, "departs at the first barrier past departure_t"
+    assert r.finished_at >= t2.departure_t
+
+
+# ----------------------------------------------------- reference stability
+def test_single_tenant_path_bit_for_bit_vs_reference():
+    """The churn-capable engine must not perturb the paper's 1-tenant
+    2-channel eager-prefetch semantics at all."""
+    for layers, frac in ((4, 0.6), (8, 0.7), (12, 0.85)):
+        tr = synthetic_train_trace(layers)
+        pl = AutoSwapPlanner(tr, HW, size_threshold=1 << 20)
+        limit = int(pl.peak_load * frac)
+        dec = pl.select(limit, "swdoa")
+        ref = reference_simulate_swap_schedule(tr, dec, HW, limit)
+        got = simulate_program(tr, dec, HW, limit, channels=2, prefetch="eager")
+        for f in ("baseline_s", "duration_s", "peak_resident", "stalls",
+                  "delayed_mallocs", "tail_spill_s", "out_events", "in_events"):
+            assert getattr(got, f) == getattr(ref, f), f
+
+
+def _planned_peak_reference(trace, decisions):
+    """Frozen copy of the original O(decisions x span) python loop."""
+    curve = trace.load_curve()
+    n = len(curve)
+    for d in decisions:
+        if d.wraps:
+            spans = (range(0, min(d.in_before, n)), range(min(d.out_after, n), n))
+        else:
+            spans = (range(min(d.out_after, n), min(d.in_before, n)),)
+        for span in spans:
+            for i in span:
+                curve[i] -= d.size
+    return max(curve) if curve else 0
+
+
+def test_planned_peak_delta_rewrite_matches_reference():
+    for layers, frac in ((4, 0.5), (8, 0.7), (12, 0.9)):
+        tr = synthetic_train_trace(layers)
+        pl = AutoSwapPlanner(tr, HW, size_threshold=1 << 20)
+        dec = pl.select(int(pl.peak_load * frac), "swdoa")
+        assert planned_peak(tr, dec) == _planned_peak_reference(tr, dec)
+        # Wrap coverage: a weight absent across the iteration boundary
+        # (swapped out after its last access, back before its first).
+        w = tr.variables[0]
+        wrap = SwapDecision(w.var, w.size, max(w.accesses), min(w.accesses), wraps=True)
+        assert planned_peak(tr, dec + [wrap]) == _planned_peak_reference(tr, dec + [wrap])
+    assert planned_peak(IterationTrace([], 0), []) == 0
+
+
+# ------------------------------------------------------ attribution bugfixes
+def test_tail_spill_attributed_per_tenant_not_global():
+    """Tenant B launches no swap traffic: its tail_spill_s must be zero even
+    while tenant A's swap-outs are still draining on the shared channel."""
+    n_ops = 6
+    big = 32 * MB
+    vs_a = [
+        VariableInfo(0, big, 0, n_ops, [0, 1], [True, False]),
+        VariableInfo(1, MB, 0, n_ops, [i for i in range(n_ops)], [True] * n_ops),
+    ]
+    tr_a = IterationTrace(vs_a, n_ops)
+    tr_a.op_costs = {i: (1e6, 0.0) for i in range(n_ops)}  # fast compute
+    # Swap-out after op 1 with in_before past the end: pure tail traffic.
+    dec_a = [SwapDecision(0, big, 1, n_ops)]
+    vs_b = [VariableInfo(0, MB, 0, n_ops, [0], [True])]
+    tr_b = IterationTrace(vs_b, n_ops)
+    tr_b.op_costs = {i: (1e6, 0.0) for i in range(n_ops)}
+    rt = MemoryRuntime(HW, budget=None, channels=2)
+    rt.run([Tenant("A", tr_a, dec_a, floor=0), Tenant("B", tr_b, floor=0)])
+    res_a = rt.runs["A"].sim_result()
+    res_b = rt.runs["B"].sim_result()
+    assert res_a.tail_spill_s > 0.0, "A's own swap-out drains past its compute"
+    # Regression: B used to inherit A's drain via channels.drain_time("out").
+    assert rt.channels.drain_time("out") > rt.runs["B"].t
+    assert res_b.tail_spill_s == 0.0
+
+
+def test_proportional_shares_sum_to_budget():
+    peaks = {"a": 3, "b": 3, "c": 3}
+    shares = proportional_shares(peaks, 100)
+    assert sum(shares.values()) == 100, "truncation must not withhold bytes"
+    assert max(shares.values()) - min(shares.values()) <= 1
+    # Deterministic largest-remainder assignment and proportionality.
+    peaks = {"a": 5, "b": 3, "c": 2}
+    shares = proportional_shares(peaks, 101)
+    assert sum(shares.values()) == 101
+    assert shares["a"] >= shares["b"] >= shares["c"]
+
+
+def test_colocate_shares_grant_full_budget():
+    progs = {
+        "a": MemoryProgram.from_trace(synthetic_train_trace(8)),
+        "b": MemoryProgram.from_trace(synthetic_train_trace(6)),
+        "c": MemoryProgram.from_trace(synthetic_train_trace(4)),
+    }
+    peaks = {n: p.require_trace().peak_load() for n, p in progs.items()}
+    budget = sum(peaks.values()) * 2 // 3 + 1  # indivisible on purpose
+    result = colocate_programs(progs, HW, budget=budget, channels=2,
+                               size_threshold=1 << 20)
+    assert sum(result.shares.values()) == budget
+    for n, s in result.shares.items():
+        assert result.report.tenant(n).status == "completed"
+        assert s <= budget
+
+
+def test_colocate_with_churn_and_renegotiation():
+    """End-to-end: colocate_programs threads arrivals/priorities/renegotiate
+    through to the runtime and the pipeline replanner."""
+    progs = {
+        "victim": MemoryProgram.from_trace(synthetic_train_trace(12)),
+        "newcomer": MemoryProgram.from_trace(synthetic_train_trace(6)),
+    }
+    result = colocate_programs(
+        progs, HW, budget_frac=0.75, channels=2, size_threshold=1 << 20,
+        iterations=5,
+        arrivals={"newcomer": 0.02},
+        priorities={"victim": 0.5, "newcomer": 1.0},
+        renegotiate=True,
+    )
+    rep = result.report
+    assert rep.policy == "renegotiate"
+    assert all(t.status == "completed" for t in rep.tenants)
+    assert rep.tenant("newcomer").arrival_t == 0.02
+    assert rep.aggregate_peak <= result.budget
+    assert rep.overflow_events == 0

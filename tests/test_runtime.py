@@ -13,9 +13,10 @@ Covers the runtime tentpole:
 import pytest
 from repro.testing import given, settings, st  # hypothesis or deterministic fallback
 
+from repro.core._solver_reference import reference_simulate_swap_schedule
 from repro.core.autoswap import AutoSwapPlanner
 from repro.core.events import IterationTrace, VariableInfo
-from repro.core.simulator import HardwareSpec, SimResult, SwapDecision, assign_times, simulate_swap_schedule
+from repro.core.simulator import HardwareSpec, SwapDecision, simulate_swap_schedule
 from repro.plan import MemoryProgram, PassContext, Pipeline, PlanCache, PlanKey, SwapSelection, swap_key
 from repro.runtime import (
     ChannelPool,
@@ -54,104 +55,9 @@ def synth_trace(n_layers=8, act_bytes=8 << 20, weight_bytes=4 << 20):
 
 
 # --------------------------------------------------------------- reference
-def _reference_simulate(trace, decisions, hw, limit=None):
-    """Frozen copy of the pre-runtime ``simulate_swap_schedule`` event loop
-    (one serialized out stream + one serialized in stream, eager prefetch).
-    The engine's 1-tenant/2-channel/eager path must match it exactly."""
-    if trace.op_times is None:
-        assign_times(trace, hw)
-    times = trace.op_times
-    baseline = times[-1]
-    costs = trace.op_costs or {}
-
-    def op_dur(i):
-        flops, nbytes = costs.get(i, (0.0, 0.0))
-        if flops or nbytes:
-            return max(flops / hw.eff_flops, nbytes / hw.hbm_bw) + hw.op_overhead_s
-        return 0.0
-
-    out_at, in_at = {}, {}
-    for d in decisions:
-        out_at.setdefault(d.out_after, []).append(d)
-        in_at.setdefault(d.in_before, []).append(d)
-    delta = [0] * (trace.num_indices + 1)
-    malloc_size_at = {}
-    for v in trace.variables:
-        delta[v.alloc_index] += v.size
-        malloc_size_at[v.alloc_index] = v.size
-        if v.free_index <= trace.num_indices:
-            delta[v.free_index] -= v.size
-    transfer = lambda size: size / hw.link_bw
-    t = 0.0
-    resident = peak_resident = 0
-    out_stream_free = in_stream_free = 0.0
-    out_done, in_done = {}, {}
-    pending_outs = []
-    stalls = delayed = 0
-    res = SimResult(baseline_s=baseline, duration_s=0.0, peak_resident=0)
-    for d in decisions:
-        if d.wraps:
-            resident -= d.size
-            out_done[d.var] = 0.0
-    for i in range(trace.num_indices):
-        for d in in_at.get(i, ()):
-            if d.var not in in_done:
-                start = max(t, in_stream_free, out_done.get(d.var, 0.0))
-                end = start + transfer(d.size)
-                in_stream_free = end
-                in_done[d.var] = end
-                resident += d.size
-                res.in_events.append((d.var, start, end))
-            if in_done[d.var] > t:
-                stalls += 1
-                t = in_done[d.var]
-        if limit is not None and delta[i] > 0 and i in malloc_size_at:
-            while resident + delta[i] > limit and pending_outs:
-                pending_outs.sort()
-                done_t, var, size = pending_outs.pop(0)
-                if done_t > t:
-                    delayed += 1
-                    t = done_t
-                resident -= size
-        resident += delta[i]
-        peak_resident = max(peak_resident, resident)
-        t += op_dur(i)
-        for d in out_at.get(i, ()):
-            start = max(t, out_stream_free)
-            end = start + transfer(d.size)
-            out_stream_free = end
-            out_done[d.var] = end
-            pending_outs.append((end, d.var, d.size))
-            res.out_events.append((d.var, start, end))
-        still = []
-        for done_t, var, size in pending_outs:
-            if done_t <= t:
-                resident -= size
-            else:
-                still.append((done_t, var, size))
-        pending_outs = still
-        upcoming = sorted(
-            (d for d in decisions
-             if d.var in out_done and d.var not in in_done and d.in_before > i),
-            key=lambda d: d.in_before,
-        )
-        for d in upcoming:
-            need = transfer(d.size)
-            if limit is not None and resident + d.size > limit:
-                break
-            start = max(t, in_stream_free, out_done[d.var])
-            end = start + need
-            in_stream_free = end
-            in_done[d.var] = end
-            resident += d.size
-            peak_resident = max(peak_resident, resident)
-            res.in_events.append((d.var, start, end))
-    res.duration_s = t
-    res.tail_spill_s = max(0.0, out_stream_free - t)
-    res.peak_resident = peak_resident
-    res.stalls = stalls
-    res.delayed_mallocs = delayed
-    return res
+# Frozen copy of the pre-runtime ``simulate_swap_schedule`` event loop, now
+# shared with benchmarks/bench_churn.py via core/_solver_reference.py.
+_reference_simulate = reference_simulate_swap_schedule
 
 
 FIELDS = ("baseline_s", "duration_s", "peak_resident", "stalls",

@@ -30,5 +30,13 @@ echo "== runtime smoke benchmark: DMA channel scaling + colocation gates =="
 python -m benchmarks.bench_runtime --smoke --out "${TMPDIR:-/tmp}/BENCH_runtime_smoke.json" \
   || { echo "FAIL runtime bench"; status=1; }
 
+echo "== churn smoke benchmark: renegotiation vs FIFO queueing =="
+# Exits non-zero unless renegotiation strictly reduces the newcomers' mean
+# queue wait under the same Poisson workload with bounded victim overhead,
+# zero overflow events, and the 1-tenant/K=2 path bit-for-bit equal to the
+# frozen reference simulator.  Committed BENCH_churn.json is the full run.
+python -m benchmarks.bench_churn --smoke --out "${TMPDIR:-/tmp}/BENCH_churn_smoke.json" \
+  || { echo "FAIL churn bench"; status=1; }
+
 [ "$status" -eq 0 ] && echo "CI OK" || echo "CI FAILED"
 exit "$status"
