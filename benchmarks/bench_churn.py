@@ -31,9 +31,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
+from benchmarks.common import write_bench_json
 from repro.core._solver_reference import reference_simulate_swap_schedule
 from repro.core.autoswap import AutoSwapPlanner
 from repro.core.simulator import GTX_1080TI
@@ -183,8 +183,7 @@ def main(argv=None) -> int:
             "single_tenant_matches_reference": ok_ref,
         },
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
+    write_bench_json(args.out, report)
 
     print(
         f"churn ({report['mode']}): {len(items)} Poisson newcomers over a "

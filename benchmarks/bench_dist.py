@@ -1,0 +1,278 @@
+"""Distributed planning benchmark: per-shard plans + host-link contention.
+
+Three claims over the ``repro.dist`` subsystem, all on simulated devices
+(the capture walks abstract jaxprs — no multi-device runtime needed):
+
+  * **per-device peak** — planning on the per-shard trace of a ``--shards``-
+    way data-parallel mesh lands at or below the replicated single-device
+    plan's peak scaled by the shard fraction, plus the bytes that stay
+    replicated (weights/optimizer state).  Sharded serving can provision
+    per-host HBM from the per-shard plan instead of the full-model peak.
+
+  * **contention changes schedules** — running the per-device tenants over a
+    shared host link (one PCIe/NVLink budget for all devices, collectives
+    blacking the link out) moves at least one swap transfer relative to the
+    contention-free baseline: bandwidth sharing is load-bearing, not
+    decorative.
+
+  * **collective-aware ≥ blind** — back-scheduling swap-ins around the
+    tagged collective windows never ends up with *more* mean overhead than
+    scheduling blind on the same contended link.
+
+Plus the degenerate-mesh pin: a 1x1-mesh capture solves to a plan
+byte-identical (``dumps_canonical``) to the single-device pipeline's.
+
+Writes ``BENCH_dist.json`` (``--out``); exits non-zero when an acceptance
+flag fails — ``tools/ci.sh`` runs ``--smoke``.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_dist [--smoke] [--out BENCH_dist.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import write_bench_json
+from repro.core.simulator import TPU_V5E
+from repro.dist import (
+    MeshSpec,
+    capture_sharded_trace,
+    gradient_sync_collective,
+    run_mesh,
+    schedules_differ,
+    solve_sharded,
+)
+from repro.launch.shardplan import SpecMesh, build_probe
+from repro.launch.steps import batch_specs, param_specs
+from repro.plan import PlanKey, dumps_canonical
+from repro.plan.passes import (
+    PassContext,
+    Pipeline,
+    PoolPlacement,
+    SwapSelection,
+    TimingAssign,
+    TraceCapture,
+)
+
+HW = TPU_V5E
+PEAK_SLACK = 0.01          # 1% tolerance on the shard-fraction peak bound
+OVERHEAD_EPS = 1e-9        # aware may not be worse than blind beyond fp noise
+
+
+def capture_pair(arch: str, batch: int, seq: int, shards: int,
+                 fsdp_gathers: int):
+    """(single-device capture, sharded capture, probe pieces) for one arch.
+
+    Mid-iteration ``all_gather`` collectives model FSDP-style parameter
+    gathers spread through the step; the tail ``all_reduce`` is the
+    data-parallel gradient sync (the same ``gradient_sync_collective`` cost
+    model the shardplan CLI prices).  Both are cost-model synthesized — a
+    GSPMD-jitted jaxpr holds no collective eqns (XLA inserts them at
+    compile time).
+    """
+    cfg, _, step_probe, example_args = build_probe(arch, True, batch, seq)
+    pshapes, probe = example_args
+
+    def specs_for(mesh: MeshSpec):
+        sm = SpecMesh(mesh)
+        return (param_specs(cfg, pshapes, sm), batch_specs(cfg, probe, sm))
+
+    mesh1 = MeshSpec.make(data=1)
+    single = capture_sharded_trace(
+        step_probe, *example_args, mesh=mesh1, hw=HW,
+        in_specs=specs_for(mesh1), arg_names=["params", "batch"],
+    )
+
+    mesh = MeshSpec.make(data=shards)
+    pspecs, bspecs = specs_for(mesh)
+    sync = gradient_sync_collective(pshapes, pspecs, mesh)
+    grad_bytes = sync[1]
+    extra = [sync]
+    for k in range(fsdp_gathers):
+        extra.append(
+            ("all_gather", grad_bytes // max(1, fsdp_gathers),
+             (k + 1) / (fsdp_gathers + 1), shards)
+        )
+    sharded = capture_sharded_trace(
+        step_probe, *example_args, mesh=mesh, hw=HW,
+        in_specs=(pspecs, bspecs), arg_names=["params", "batch"],
+        extra_collectives=extra,
+    )
+    return single, sharded, (step_probe, example_args)
+
+
+def replicated_bytes_peak(single, sharded) -> int:
+    """Peak load of the variables sharding does NOT divide (same size in both
+    captures) — the provable tolerance on the shard-fraction peak bound."""
+    from repro.core.events import IterationTrace
+
+    st = single.groups["spmd"].trace
+    dt = sharded.groups["spmd"].trace
+    d_size = {v.var: v.size for v in dt.variables}
+    replicated = [v for v in st.variables if d_size.get(v.var) == v.size]
+    return IterationTrace(list(replicated), st.num_indices).peak_load()
+
+
+def bench_peak(arch: str, batch: int, seq: int, shards: int,
+               fsdp_gathers: int, limit_frac: float, size_threshold: int) -> dict:
+    single, sharded, (step_probe, example_args) = capture_pair(
+        arch, batch, seq, shards, fsdp_gathers
+    )
+    single_peak = single.groups["spmd"].trace.peak_load()
+    shard_peak = sharded.groups["spmd"].trace.peak_load()
+    tolerance = replicated_bytes_peak(single, sharded)
+    bound = single_peak / shards + tolerance
+    solved = solve_sharded(sharded, HW, limit_frac=limit_frac,
+                           size_threshold=size_threshold)
+    return {
+        "arch": arch,
+        "shards": shards,
+        "single_device_peak": single_peak,
+        "per_device_peak": shard_peak,
+        "shard_fraction_bound": int(bound),
+        "replicated_bytes_tolerance": tolerance,
+        "collectives": len(sharded.groups["spmd"].collectives),
+        "collective_s_per_iter": sum(
+            c.seconds for c in sharded.groups["spmd"].collectives
+        ),
+        "peak_within_shard_bound": shard_peak <= bound * (1 + PEAK_SLACK),
+        "_solved": solved,
+        "_captures": (single, sharded, step_probe, example_args),
+    }
+
+
+def bench_contention(solved, budget_frac: float, iterations: int,
+                     link_bw_frac: float, link_lanes: int) -> dict:
+    from repro.dist import mesh_tenants
+
+    shard_peak = solved.capture.groups["spmd"].trace.peak_load()
+    # The budget targets budget_frac of the shard peak but must admit the
+    # solved plan's resident floor (selection is best-effort at its limit).
+    floor = max(t.resident_floor() for t in mesh_tenants(solved))
+    budget = max(int(shard_peak * budget_frac), floor)
+    kw = dict(budget_per_device=budget, channels=2, iterations=iterations,
+              link_bw=HW.link_bw * link_bw_frac, link_lanes=link_lanes)
+    uncontended = run_mesh(solved, HW, contended=False,
+                           budget_per_device=budget, channels=2,
+                           iterations=iterations)
+    aware = run_mesh(solved, HW, contended=True, contention_aware=True, **kw)
+    blind = run_mesh(solved, HW, contended=True, contention_aware=False, **kw)
+    return {
+        "budget_per_device": budget,
+        "link_lanes": link_lanes,
+        "link_bw_frac": link_bw_frac,
+        "mean_overhead": {
+            "uncontended": uncontended.mean_overhead(),
+            "contended_aware": aware.mean_overhead(),
+            "contended_blind": blind.mean_overhead(),
+        },
+        "makespan_s": {
+            "uncontended": uncontended.makespan_s,
+            "contended_aware": aware.makespan_s,
+            "contended_blind": blind.makespan_s,
+        },
+        "link": aware.report.link,
+        "device_peaks": aware.report.device_peaks,
+        "contention_changes_schedules": schedules_differ(uncontended, aware),
+        "aware_not_worse_than_blind": (
+            aware.mean_overhead() <= blind.mean_overhead() + OVERHEAD_EPS
+        ),
+        "aware_vs_blind_schedules_differ": schedules_differ(aware, blind),
+    }
+
+
+def bench_identity(arch: str, batch: int, seq: int, step_probe, example_args,
+                   limit_frac: float, size_threshold: int) -> dict:
+    """1x1-mesh dist capture must solve to the byte-identical plan the
+    single-device pipeline produces for the same step."""
+    key = PlanKey(arch, f"train:b{batch}s{seq}:smoke", HW.name)
+    mesh1 = MeshSpec.make(data=1)
+    cap = capture_sharded_trace(
+        step_probe, *example_args, mesh=mesh1, hw=HW,
+        arg_names=["params", "batch"],
+    )
+    limit = int(cap.groups["spmd"].trace.peak_load() * limit_frac)
+    dist_solved = solve_sharded(cap, HW, base_key=key, limit=limit,
+                                size_threshold=size_threshold)
+    ctx = PassContext(hw=HW, key=key, size_threshold=size_threshold)
+    single_prog = Pipeline([
+        TraceCapture(step_fn=step_probe, example_args=example_args,
+                     arg_names=["params", "batch"]),
+        TimingAssign(),
+        PoolPlacement(),
+        SwapSelection(limit=limit),
+    ]).run(None, ctx)
+    same = dumps_canonical(dist_solved.programs["spmd"]) == dumps_canonical(single_prog)
+    return {"plans_byte_identical_on_1x1": same, "limit": limit}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small step / short run for CI (same acceptance gates)")
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--budget-frac", type=float, default=0.7)
+    ap.add_argument("--limit-frac", type=float, default=0.6)
+    ap.add_argument("--link-lanes", type=int, default=2)
+    ap.add_argument("--link-bw-frac", type=float, default=1.0,
+                    help="shared host-link bandwidth / one device's link bw")
+    ap.add_argument("--out", default="BENCH_dist.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        arch, batch, seq, iterations, gathers, threshold = "qwen3-4b", 4, 64, 2, 4, 1 << 12
+    else:
+        arch, batch, seq, iterations, gathers, threshold = "qwen3-4b", 8, 128, 3, 8, 1 << 16
+
+    peak = bench_peak(arch, batch, seq, args.shards, gathers,
+                      args.limit_frac, threshold)
+    solved = peak.pop("_solved")
+    single, sharded, step_probe, example_args = peak.pop("_captures")
+    contention = bench_contention(
+        solved, args.budget_frac, iterations, args.link_bw_frac, args.link_lanes
+    )
+    identity = bench_identity(arch, batch, seq, step_probe, example_args,
+                              args.limit_frac, threshold)
+
+    ok_peak = peak["peak_within_shard_bound"]
+    ok_sched = contention["contention_changes_schedules"]
+    ok_aware = contention["aware_not_worse_than_blind"]
+    ok_ident = identity["plans_byte_identical_on_1x1"]
+    report = {
+        "mode": "smoke" if args.smoke else "full",
+        "hardware": HW.name,
+        "mesh": {"data": args.shards},
+        "per_device_peak": peak,
+        "contention": contention,
+        "identity_1x1": identity,
+        "acceptance": {
+            "per_device_peak_within_shard_bound": ok_peak,
+            "contention_changes_schedules": ok_sched,
+            "contention_aware_not_worse_than_blind": ok_aware,
+            "plans_byte_identical_on_1x1": ok_ident,
+        },
+    }
+    write_bench_json(args.out, report)
+
+    mo = contention["mean_overhead"]
+    print(
+        f"dist ({report['mode']}): {arch} b{batch}s{seq} on data={args.shards} — "
+        f"per-device peak {peak['per_device_peak']/2**20:.1f}MiB vs bound "
+        f"{peak['shard_fraction_bound']/2**20:.1f}MiB "
+        f"(replicated single-device {peak['single_device_peak']/2**20:.1f}MiB), "
+        f"{peak['collectives']} collectives"
+    )
+    print(
+        f"  mean overhead: uncontended {mo['uncontended']*100:.2f}% | shared link "
+        f"{mo['contended_aware']*100:.2f}% aware vs {mo['contended_blind']*100:.2f}% blind; "
+        f"schedules moved by contention: {ok_sched}"
+    )
+    print(f"  1x1 plan byte-identical to single-device pipeline: {ok_ident}")
+    print(f"wrote {args.out}; acceptance: {report['acceptance']}")
+    return 0 if (ok_peak and ok_sched and ok_aware and ok_ident) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

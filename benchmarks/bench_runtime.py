@@ -25,10 +25,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
-from benchmarks.common import cnn_trace
+from benchmarks.common import cnn_trace, write_bench_json
 from repro.core.autoswap import AutoSwapPlanner
 from repro.core.simulator import GTX_1080TI
 from repro.plan import MemoryProgram, PlanKey
@@ -135,8 +134,7 @@ def main(argv=None) -> int:
             "colocate_below_sum_of_isolated_peaks": ok_colocate,
         },
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
+    write_bench_json(args.out, report)
 
     for r in channel_scaling:
         best = min(r["rows"], key=lambda row: row["k2"] - row["k1"])

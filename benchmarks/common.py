@@ -1,8 +1,9 @@
-"""Shared benchmark plumbing: CNN trace cache + CSV emission."""
+"""Shared benchmark plumbing: CNN trace cache + CSV/JSON emission."""
 
 from __future__ import annotations
 
 import functools
+import json
 import sys
 import time
 
@@ -38,6 +39,15 @@ def cnn_trace(name: str, batch: int = 100, remat: bool = False):
     tr = trace_step_fn(step, params, params, x, y)
     assign_times(tr, GTX_1080TI)
     return tr
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Write one benchmark's machine-readable report (`BENCH_*.json`).
+
+    One canonical shape (indent=2, sorted keys) shared by every bench_*.py
+    so reports diff cleanly across PRs."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
 
 
 def emit(rows: list[tuple], header: str = "name,us_per_call,derived"):

@@ -84,6 +84,11 @@ class IterationTrace:
     # Optional op index -> (flops, bytes_touched): compute-cost estimates from
     # the jaxpr tracer, consumed by core/simulator.py to build op_times.
     op_costs: dict[int, tuple[float, float]] | None = None
+    # Optional op index -> seconds of wall time the roofline model cannot
+    # derive from (flops, bytes) — collective communication durations tagged
+    # by the sharded tracer (repro.dist).  Folded into op_times by
+    # ``assign_times``; never serialized (op_times carries the result).
+    op_extra_s: dict[int, float] | None = None
     # Memoized load curve: (guard, int64 ndarray).  The guard catches the
     # structural mutations that occur in practice (adding/removing variables,
     # re-detecting the horizon); in-place edits of an existing VariableInfo's

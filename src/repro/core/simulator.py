@@ -33,6 +33,12 @@ class HardwareSpec:
     link_bw: float             # device<->host bytes/s (PCIe / DMA), per direction
     op_overhead_s: float = 2e-6    # fixed per-op launch cost
     malloc_cost_s: float = 0.0     # per-malloc driver cost (cudaMalloc path)
+    # Device<->device interconnect bytes/s per direction (NVLink / TPU ICI),
+    # used by repro.dist's collective cost model.  Defaults to the host link
+    # (PCIe peer-to-peer) for GPUs without a dedicated interconnect.
+    ici_bw: float = 0.0
+    # Per-collective launch/synchronization latency (ring setup, barriers).
+    collective_latency_s: float = 5e-6
     # Achieved fraction of peak compute. Calibrated for the paper's testbed
     # against its own Table I iteration times (VGG16 @ batch 100 trains at
     # ~71 ms/iter on the 1080 Ti => ~12.5% of fp32 peak for small CIFAR
@@ -45,14 +51,18 @@ class HardwareSpec:
         return self.peak_flops * self.efficiency
 
 
-# The paper's testbed: GTX 1080 Ti (fp32) on PCIe 3.0 x16.
+# The paper's testbed: GTX 1080 Ti (fp32) on PCIe 3.0 x16.  No NVLink: peer
+# traffic rides the same PCIe complex as host swaps.
 GTX_1080TI = HardwareSpec(
-    "gtx1080ti", peak_flops=11.3e12, hbm_bw=484e9, link_bw=12e9, efficiency=0.125
+    "gtx1080ti", peak_flops=11.3e12, hbm_bw=484e9, link_bw=12e9, efficiency=0.125,
+    ici_bw=12e9,
 )
 # Our target: TPU v5e (bf16), host DMA modeled at the stated 50 GB/s link
-# figure; 0.5 is a typical large-matmul MFU.
+# figure; 0.5 is a typical large-matmul MFU.  ICI at ~100 GB/s per direction
+# (1600 Gbps aggregate inter-chip links).
 TPU_V5E = HardwareSpec(
-    "tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9, efficiency=0.5
+    "tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9, efficiency=0.5,
+    ici_bw=100e9,
 )
 # cudaMalloc-style allocation cost used for the Table I speedup reproduction.
 CUDA_MALLOC_COST_S = 180e-6
@@ -60,8 +70,15 @@ POOL_LOOKUP_COST_S = 0.4e-6
 
 
 def assign_times(trace: IterationTrace, hw: HardwareSpec) -> IterationTrace:
-    """Populate ``trace.op_times`` from the per-op cost estimates (in place)."""
+    """Populate ``trace.op_times`` from the per-op cost estimates (in place).
+
+    ``trace.op_extra_s`` (op index -> seconds) charges time the roofline
+    model cannot see — collective communication tagged by the sharded
+    tracer (repro.dist) — so swap windows that overlap a collective are as
+    long as the interconnect actually makes them.
+    """
     costs = trace.op_costs or {}
+    extra = trace.op_extra_s or {}
     times = [0.0] * (trace.num_indices + 1)
     t = 0.0
     for i in range(trace.num_indices):
@@ -69,6 +86,7 @@ def assign_times(trace: IterationTrace, hw: HardwareSpec) -> IterationTrace:
         flops, nbytes = costs.get(i, (0.0, 0.0))
         if flops or nbytes:
             t += max(flops / hw.eff_flops, nbytes / hw.hbm_bw) + hw.op_overhead_s
+        t += extra.get(i, 0.0)
     times[trace.num_indices] = t
     trace.op_times = times
     return trace

@@ -1,0 +1,56 @@
+"""repro.dist: mesh-aware trace capture, per-device planning, execution.
+
+  capture  — MeshSpec (mesh shape as data), sharded jaxpr walking (sizes
+             divided by PartitionSpec-derived shard divisors), collective
+             tagging with interconnect cost-model durations
+  program  — ShardedProgram: the repro.plan Pipeline once per device group
+             (identical SPMD shards solve once and fan out), artifacts keyed
+             by mesh topology so per-shard plans never collide with
+             single-device plans in one PlanCache
+  execute  — run_mesh: one runtime tenant per device, per-device HBM pools,
+             all DMA channels contending on a shared HostLink with
+             collective blackouts
+
+Driven by ``python -m repro.launch.shardplan`` (and ``launch/train.py
+--dist-plan``); measured by ``benchmarks/bench_dist.py``.
+"""
+
+from .capture import (
+    COLLECTIVE_PRIMS,
+    Collective,
+    MeshSpec,
+    ShardedCapture,
+    ShardedTrace,
+    capture_sharded_trace,
+    collective_seconds,
+    divisors_from_specs,
+    gradient_sync_collective,
+    shard_divisor,
+    shard_existing_trace,
+    sharded_param_bytes,
+)
+from .execute import MeshRunResult, mesh_tenants, run_mesh, schedules_differ
+from .program import ShardedProgram, group_key, solve_sharded, solved_decisions
+
+__all__ = [
+    "COLLECTIVE_PRIMS",
+    "Collective",
+    "MeshSpec",
+    "ShardedCapture",
+    "ShardedTrace",
+    "capture_sharded_trace",
+    "collective_seconds",
+    "divisors_from_specs",
+    "gradient_sync_collective",
+    "shard_divisor",
+    "shard_existing_trace",
+    "sharded_param_bytes",
+    "MeshRunResult",
+    "mesh_tenants",
+    "run_mesh",
+    "schedules_differ",
+    "ShardedProgram",
+    "group_key",
+    "solve_sharded",
+    "solved_decisions",
+]

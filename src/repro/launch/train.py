@@ -78,6 +78,9 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=-1, help="inject a crash at step N (tests)")
     ap.add_argument("--step-timeout", type=float, default=10.0, help="straggler factor vs median")
     ap.add_argument("--plan", action="store_true", help="print SmartPool/AutoSwap report")
+    ap.add_argument("--dist-plan", default=None, metavar="MESH",
+                    help='solve per-device plans for a mesh (e.g. "data=4") '
+                         "before training; cached under a topology-extended key")
     ap.add_argument("--plan-cache", default=None,
                     help="directory of solved plan artifacts (reused across runs)")
     ap.add_argument("--hbm-limit-gb", type=float, default=None,
@@ -88,6 +91,36 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     batch_fn = make_batch_fn(cfg, args.batch, args.seq, args.seed)
+
+    if args.dist_plan:
+        # Mesh-aware planning (repro.dist): per-device trace capture under
+        # the launch/steps.py PartitionSpecs, solved once per device group
+        # and cached under a topology-extended PlanKey — so this process's
+        # sharded plan never aliases the single-device plan below.
+        from repro.core.simulator import TPU_V5E
+        from repro.dist import MeshSpec, solve_sharded
+        from repro.launch.shardplan import capture_for_mesh, probe_from_model
+        from repro.plan import PlanCache, PlanKey
+
+        mesh = MeshSpec.parse(args.dist_plan)
+        step_probe, example_args = probe_from_model(model, batch_fn)
+        capture = capture_for_mesh(cfg, step_probe, example_args, mesh, TPU_V5E)
+        smoke = ":smoke" if args.smoke else ""
+        base_key = PlanKey(args.arch, f"train:b{args.batch}s{args.seq}{smoke}", TPU_V5E.name)
+        dist_cache = PlanCache(args.plan_cache) if args.plan_cache else None
+        solved = solve_sharded(
+            capture, TPU_V5E, base_key=base_key, cache=dist_cache,
+            limit=(int(args.hbm_limit_gb * 2**30) if args.hbm_limit_gb is not None else None),
+        )
+        for g, program in solved.programs.items():
+            trace = program.require_trace()
+            src = " (restored from cache)" if solved.cache_hits[g] else ""
+            print(
+                f"[dist-plan] mesh {mesh.signature() or '1'} group {g}: "
+                f"per-device peak {trace.peak_load()/2**20:.1f}MiB, "
+                f"{len(capture.groups[g].collectives)} collectives, "
+                f"solved in {solved.solve_ms[g]:.1f} ms{src}"
+            )
 
     remat_policy = None
     if args.plan or args.plan_cache or args.hbm_limit_gb is not None:

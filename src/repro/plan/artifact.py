@@ -156,6 +156,7 @@ def program_to_json(program: MemoryProgram) -> dict:
                 "arch": program.key.arch,
                 "step_signature": program.key.step_signature,
                 "hardware": program.key.hardware,
+                "topology": program.key.topology,
             }
             if program.key
             else None

@@ -33,22 +33,34 @@ from ..core.smartpool import AllocationPlan
 
 @dataclass(frozen=True)
 class PlanKey:
-    """Identity of a solved-plan artifact: (arch, step signature, hardware).
+    """Identity of a solved-plan artifact: (arch, step signature, hardware,
+    topology).
 
     ``step_signature`` is a caller-chosen string naming the step instance
     (e.g. ``train:b8s128`` or ``prefill:b4p32``) — it must be computable
     *without* tracing, otherwise a cache hit could never skip the trace.
     Anything that changes the captured event stream (batch/seq shape, model
     config, tracer settings like max_scan_unroll) belongs in the signature.
+
+    ``topology`` names the device topology the trace was captured for: the
+    mesh shape plus the PartitionSpec signature of the step's inputs
+    (``repro.dist.MeshSpec.plan_topology``).  Empty string means
+    single-device — the legacy key shape, so existing artifacts keep their
+    cache names — and a sharded capture always sets it non-empty, so a plan
+    solved on a 1-device trace is never served to a sharded step (or a
+    2-device plan to an 8-device mesh) from the same ``PlanCache``.
     """
 
     arch: str
     step_signature: str
     hardware: str
+    topology: str = ""
 
     def cache_name(self) -> str:
         """Filesystem-safe artifact name, collision-guarded by a short hash."""
         raw = f"{self.arch}|{self.step_signature}|{self.hardware}"
+        if self.topology:
+            raw += f"|{self.topology}"
         slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", raw).strip("_")
         digest = hashlib.sha256(raw.encode()).hexdigest()[:10]
         return f"{slug}-{digest}"

@@ -1,8 +1,10 @@
 """repro.runtime: the execution layer on top of the repro.plan IR.
 
   engine   — ChannelPool (K DMA channels), PoolAccountant (shared budget),
-             Tenant, MemoryRuntime (N-tenant event-driven co-scheduler with
-             arrival churn + preemptive floor renegotiation),
+             HostLink (shared host-interconnect bandwidth pool with
+             collective blackouts), Tenant, MemoryRuntime (N-tenant
+             event-driven co-scheduler with arrival churn, preemptive floor
+             renegotiation and per-device pools for mesh execution),
              simulate_program (the paper's simulator as a 1-tenant run)
   tenants  — tenant_from_program / colocate_programs: plan-pipeline +
              PlanCache warm-start into the runtime; pipeline_replanner is
@@ -17,6 +19,7 @@ the command line and ``benchmarks/bench_runtime.py`` measures it.
 
 from .engine import (
     ChannelPool,
+    HostLink,
     MemoryRuntime,
     PoolAccountant,
     RuntimeReport,
@@ -36,6 +39,7 @@ from .workload import WorkloadItem, parse_arrivals, poisson_workload, synthetic_
 
 __all__ = [
     "ChannelPool",
+    "HostLink",
     "MemoryRuntime",
     "PoolAccountant",
     "RuntimeReport",

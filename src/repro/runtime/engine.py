@@ -29,6 +29,15 @@ Admission control: a tenant whose resident floor (planned peak under its
 swap schedule) does not fit in the unreserved budget is queued FIFO, not
 OOM-killed; it starts when a finishing tenant releases its reservation.
 
+* **Devices** — tenants carry an optional ``device``: tenants on distinct
+  devices get distinct HBM accountants and DMA channel pools (the mesh
+  execution shape ``repro.dist`` builds), while every device's channels
+  contend on one shared ``HostLink`` bandwidth pool when configured —
+  modeling the paper's swap bandwidth as a genuinely shared host resource,
+  with tagged collectives blacking the link out and the contention-aware
+  prefetch back-scheduling around them.  ``device=None`` (default) keeps
+  the legacy single-pool behavior bit-for-bit.
+
 Dynamic churn: tenants carry an ``arrival_t`` (and optionally an open-ended
 iteration count bounded by a ``departure_t`` event), and the run loop is
 event-driven — arrivals are interleaved with execution in global-time order
@@ -44,6 +53,7 @@ bytes the newcomer falls back to plain FIFO queueing.
 
 from __future__ import annotations
 
+import bisect
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
@@ -94,6 +104,77 @@ class ChannelPool:
     def drain_time(self, direction: str) -> float:
         ids = self.out_ids if direction == "out" else self.in_ids
         return max(self.free_at[c] for c in ids)
+
+
+@dataclass
+class HostLink:
+    """Shared host-interconnect bandwidth pool every device's DMA contends on.
+
+    One host typically fronts several accelerators through one PCIe root
+    complex (or one NVLink/ICI bridge to host memory): per-device DMA
+    channels do not each get the full link.  ``total_bw`` bytes/s of
+    aggregate host-link bandwidth is carved into ``lanes`` serialized lanes
+    of ``total_bw / lanes`` each; a swap transfer must hold its device's
+    directional DMA channel AND a free lane, and moves at
+    ``min(device link_bw, lane_bw)``.  With enough lanes for every channel
+    the pool is contention-free; fewer lanes model the paper's swap
+    bandwidth as a genuinely shared resource (SuperNeurons' observation that
+    co-resident jobs fight for the same PCIe).
+
+    Collectives occupy the interconnect with priority (XLA schedules them;
+    swaps are opportunistic): ``add_blackout`` reserves an interval on every
+    lane, and a transfer scheduled into a blackout is shifted past its end.
+    """
+
+    total_bw: float
+    lanes: int
+    free_at: list[float] = field(default_factory=list)
+    blackouts: list[tuple[float, float]] = field(default_factory=list)
+    # Observability counters, surfaced in RuntimeReport.link.
+    bytes_moved: int = 0
+    transfers: int = 0
+    blackout_s: float = 0.0
+
+    @classmethod
+    def make(cls, total_bw: float, lanes: int) -> "HostLink":
+        lanes = max(1, int(lanes))
+        return cls(float(total_bw), lanes, [0.0] * lanes)
+
+    @property
+    def lane_bw(self) -> float:
+        return self.total_bw / self.lanes
+
+    def add_blackout(self, start: float, end: float,
+                     prune_before: float | None = None) -> None:
+        """Register a collective's occupancy.  The list stays sorted by
+        start (next_clear early-exits on it) and, so long runs don't
+        accumulate dead intervals, is pruned below ``prune_before`` — the
+        caller's simulation frontier (the minimum running-tenant clock; no
+        future transfer can be scheduled to start before it, and
+        later-admitted tenants start at or after the admitting event's
+        clock).  The registering tenant's own post-op clock is NOT a safe
+        frontier: lagging tenants may still schedule into earlier windows."""
+        if end > start:
+            bisect.insort(self.blackouts, (start, end))
+            self.blackout_s += end - start
+            if prune_before is not None and len(self.blackouts) > 256:
+                self.blackouts = [
+                    (s, e) for s, e in self.blackouts if e > prune_before
+                ]
+
+    def next_clear(self, start: float, duration: float) -> float:
+        """Earliest start >= ``start`` whose [start, start+duration) window
+        overlaps no collective blackout."""
+        moved = True
+        while moved:
+            moved = False
+            for s, e in self.blackouts:
+                if s >= start + duration:
+                    break  # sorted by start: nothing later can overlap
+                if start < e:
+                    start = e
+                    moved = True
+        return start
 
 
 # --------------------------------------------------------------- accounting
@@ -158,6 +239,22 @@ class Tenant:
     arrival_t: float = 0.0
     priority: float = 1.0
     departure_t: float | None = None
+    # Mesh execution: which device pool this tenant's residency and DMA
+    # channels belong to.  ``None`` is the default single shared device (the
+    # legacy runtime shape); tenants with distinct devices get distinct HBM
+    # accountants and channel pools but contend on the engine's HostLink.
+    device: str | None = None
+    # Collective communication tagged by the sharded tracer: op index ->
+    # seconds the interconnect is occupied at that op (repro.dist capture).
+    # The engine advances the tenant clock through each collective and, when
+    # a HostLink is configured, blacks the link out for its duration.
+    collectives: dict[int, float] = field(default_factory=dict)
+    # A collective is ONE mesh-wide synchronized operation that every
+    # participating tenant executes: exactly one tenant per group (the
+    # group's first device) should register the link blackout, or the same
+    # logical collective is blacked out once per device.  All tenants still
+    # advance their clocks through it.
+    collective_owner: bool = True
 
     def resident_floor(self) -> int:
         if self.floor is None:
@@ -211,6 +308,13 @@ class _TenantRun:
         self.name = tenant.name
         self.hw = hw
         self.engine = engine
+        self.device = tenant.device
+        # Per-device shared state: tenants on the same device share one HBM
+        # accountant, one DMA channel pool and one pending-swap-out list;
+        # the default device (None) keeps the legacy single-pool shape.
+        self.acct = engine.acct_for(tenant.device)
+        self.chans = engine.channels_for(tenant.device)
+        self.pending = engine.pending_for(tenant.device)
         trace = tenant.trace
         if trace.op_times is None:
             assign_times(trace, hw)
@@ -240,6 +344,17 @@ class _TenantRun:
                 self.delta[v.free_index] -= v.size
 
         self.bt = trace.op_times  # baseline schedule, for prefetch back-scheduling
+
+        # Collective windows on the baseline timeline (for contention-aware
+        # back-scheduling): the collective at op i occupies the interconnect
+        # for the tail of op i's span (its roofline compute runs first).
+        self.collectives = dict(tenant.collectives)
+        n_bt = len(self.bt) - 1
+        self._coll_windows = sorted(
+            (max(0.0, self.bt[min(i + 1, n_bt)] - d), self.bt[min(i + 1, n_bt)])
+            for i, d in self.collectives.items()
+            if d > 0.0
+        )
 
         self.admit_t = admit_t
         self.t = admit_t
@@ -279,7 +394,7 @@ class _TenantRun:
         return self.iter_no + 1 < self.iterations
 
     def _transfer(self, size: int) -> float:
-        return size / self.hw.link_bw
+        return self.engine.xfer_seconds(size)
 
     def _op_dur(self, i: int) -> float:
         flops, nbytes = self.costs.get(i, (0.0, 0.0))
@@ -287,7 +402,7 @@ class _TenantRun:
             return max(flops / self.hw.eff_flops, nbytes / self.hw.hbm_bw) + self.hw.op_overhead_s
         return 0.0
 
-    def _due(self, d: SwapDecision, i: int, need: float) -> bool:
+    def _due(self, d: SwapDecision, i: int) -> bool:
         """Back-scheduling: is it time to start this swap-in?
 
         The transfer is due at the last op boundary where the baseline compute
@@ -296,11 +411,36 @@ class _TenantRun:
         slower than baseline (stalls, delayed mallocs), so a transfer started
         on the baseline schedule never misses an on-time deadline; only
         channel contention can push it late.
+
+        Under a shared HostLink the contention-aware scheduler (default)
+        budgets the *effective* lane bandwidth plus the collective blackouts
+        inside the window; the contention-blind baseline schedules as if the
+        link were private — systematically late on a contended link, which
+        is exactly the gap benchmarks measure.
         """
         bt = self.bt
         nxt = min(i + 1, len(bt) - 1)
         slack = bt[d.in_before] - bt[nxt]
+        if self.engine.link is not None and not self.engine.contention_aware:
+            need = d.size / self.hw.link_bw   # assumes a private, clear link
+        else:
+            need = self._transfer(d.size)
+            if self.engine.link is not None:
+                # Collectives black the link out inside the window: the
+                # transfer needs that much extra slack to land on time.
+                need += self._planned_blackout_s(bt[nxt], bt[d.in_before])
         return slack - self._op_dur(nxt) < need
+
+    def _planned_blackout_s(self, a: float, b: float) -> float:
+        """Seconds of [a, b) the baseline schedule spends in collectives."""
+        total = 0.0
+        for s, e in self._coll_windows:
+            if e <= a:
+                continue
+            if s >= b:
+                break
+            total += min(e, b) - max(s, a)
+        return total
 
     def _begin_iteration(self) -> None:
         self.in_done = {}
@@ -309,7 +449,7 @@ class _TenantRun:
         # when the iteration starts (swapped out during the previous tail).
         for d in self.decisions:
             if d.wraps:
-                self.engine.acct.add(self.name, -d.size)
+                self.acct.add(self.name, -d.size)
                 self.out_done[d.var] = self.t
         self.i = 0
 
@@ -322,10 +462,10 @@ class _TenantRun:
         # in-flight transfers and reset its residency to zero so the next
         # iteration's deltas (which re-count persistent variables at index 0)
         # don't double-charge the accountant.
-        acct = self.engine.acct
-        for rec in [r for r in self.engine.pending_outs if r.owner is self]:
+        acct = self.acct
+        for rec in [r for r in self.pending if r.owner is self]:
             self.t = max(self.t, rec.done_t)
-            self.engine.pending_outs.remove(rec)
+            self.pending.remove(rec)
             acct.add(self.name, -rec.size)
         if self.in_done:
             self.t = max(self.t, max(self.in_done.values()))
@@ -345,8 +485,7 @@ class _TenantRun:
             self.finished = self._end_iteration()
             return self.finished
         i = self.i
-        acct = self.engine.acct
-        chans = self.engine.channels
+        acct = self.acct
 
         # 1. If this op needs a swapped variable back, wait for its swap-in.
         for d in self.in_at.get(i, ()):
@@ -354,7 +493,7 @@ class _TenantRun:
                 # Should have been prefetched; schedule now (late prefetch).
                 # Still charged at schedule time so concurrent channels see it.
                 ready = max(self.t, self.out_done.get(d.var, 0.0))
-                start, end, ch = chans.acquire("in", ready, self._transfer(d.size))
+                start, end, ch = self.engine.acquire_transfer(self, "in", ready, d.size)
                 self.in_done[d.var] = end
                 acct.add(self.name, d.size)
                 self.in_events.append((d.var, start, end, ch))
@@ -363,12 +502,12 @@ class _TenantRun:
                 self.t = self.in_done[d.var]
 
         # 2. Budget enforcement on mallocs (paper: delay the Malloc).  Any
-        # tenant's pending swap-out frees shared headroom, so the wait is on
-        # the globally earliest completion.
+        # same-device tenant's pending swap-out frees shared headroom, so the
+        # wait is on this device's earliest completion.
         if self.engine.budget is not None and self.delta[i] > 0 and i in self.malloc_size_at:
-            while not acct.fits(self.delta[i]) and self.engine.pending_outs:
-                rec = min(self.engine.pending_outs, key=lambda r: r.done_t)
-                self.engine.pending_outs.remove(rec)
+            while not acct.fits(self.delta[i]) and self.pending:
+                rec = min(self.pending, key=lambda r: r.done_t)
+                self.pending.remove(rec)
                 if rec.done_t > self.t:
                     self.delayed += 1
                     self.t = rec.done_t
@@ -378,17 +517,31 @@ class _TenantRun:
 
         # 3. Execute the op (compute is per-tenant; only memory is shared).
         self.t += self._op_dur(i)
+        # 3b. Collective tagged at this op: it occupies the interconnect for
+        # its duration (the tenant's clock advances through it, matching the
+        # baseline op_times the sharded tracer folded the duration into),
+        # and when a HostLink is configured the link is blacked out — swap
+        # transfers of EVERY device route around it.  Only the group's
+        # collective owner registers the blackout: the collective is one
+        # mesh-wide synchronized op, not one per participating device.
+        cdur = self.collectives.get(i)
+        if cdur:
+            if self.engine.link is not None and self.tenant.collective_owner:
+                frontier = min(r.t for r in self.engine._running) if self.engine._running else self.t
+                self.engine.link.add_blackout(self.t, self.t + cdur,
+                                              prune_before=frontier)
+            self.t += cdur
 
         # 4. Launch swap-outs whose trigger access just completed.
         for d in self.out_at.get(i, ()):
-            start, end, ch = chans.acquire("out", self.t, self._transfer(d.size))
+            start, end, ch = self.engine.acquire_transfer(self, "out", self.t, d.size)
             self.out_done[d.var] = end
-            self.engine.pending_outs.append(_PendingOut(end, self, d.var, d.size))
+            self.pending.append(_PendingOut(end, self, d.var, d.size))
             self.out_events.append((d.var, start, end, ch))
 
         # 5. Retire this tenant's completed swap-outs (frees resident bytes).
-        for rec in [r for r in self.engine.pending_outs if r.owner is self and r.done_t <= self.t]:
-            self.engine.pending_outs.remove(rec)
+        for rec in [r for r in self.pending if r.owner is self and r.done_t <= self.t]:
+            self.pending.remove(rec)
             acct.add(self.name, -rec.size)
 
         # 6. Prefetch swapped-out variables back, nearest deadline first.
@@ -410,10 +563,10 @@ class _TenantRun:
         for d in upcoming:
             if self.engine.budget is not None and not acct.fits(d.size):
                 break
-            if self.engine.prefetch == "backsched" and not self._due(d, i, self._transfer(d.size)):
+            if self.engine.prefetch == "backsched" and not self._due(d, i):
                 continue
-            start, end, ch = chans.acquire(
-                "in", max(self.t, self.out_done[d.var]), self._transfer(d.size)
+            start, end, ch = self.engine.acquire_transfer(
+                self, "in", max(self.t, self.out_done[d.var]), d.size
             )
             self.in_done[d.var] = end
             acct.add(self.name, d.size)
@@ -433,9 +586,9 @@ class _TenantRun:
         in-flight tail swap-outs would otherwise stay charged to the shared
         pool forever, starving later-admitted tenants.
         """
-        acct = self.engine.acct
-        for rec in [r for r in self.engine.pending_outs if r.owner is self]:
-            self.engine.pending_outs.remove(rec)
+        acct = self.acct
+        for rec in [r for r in self.pending if r.owner is self]:
+            self.pending.remove(rec)
             acct.add(self.name, -rec.size)
         acct.add(self.name, -acct.resident.get(self.name, 0))
 
@@ -449,7 +602,7 @@ class _TenantRun:
         res = SimResult(
             baseline_s=self.baseline_s * self.completed_iterations(),
             duration_s=self.t - self.admit_t,
-            peak_resident=self.engine.acct.peak.get(self.name, 0),
+            peak_resident=self.acct.peak.get(self.name, 0),
             stalls=self.stalls,
             delayed_mallocs=self.delayed,
             tail_spill_s=max(0.0, own_out_end - self.t),
@@ -486,6 +639,8 @@ class TenantReport:
     renegotiations: int = 0
     renegotiation_freed_bytes: int = 0
     renegotiation_solve_ms: float = 0.0
+    # Device pool this tenant ran against (None = the default shared device).
+    device: str | None = None
 
     def as_dict(self) -> dict:
         return self.__dict__.copy()
@@ -505,6 +660,11 @@ class RuntimeReport:
     renegotiations_cancelled: int = 0   # staged but nobody waited at barrier
     renegotiation_freed_bytes: int = 0
     renegotiation_solve_ms: float = 0.0
+    # Mesh execution only (None on the legacy single-device shape, so the
+    # serialized report is unchanged for existing consumers): per-device
+    # aggregate peaks, and the shared HostLink's contention counters.
+    device_peaks: dict[str, int] | None = None
+    link: dict | None = None
 
     def tenant(self, name: str) -> TenantReport:
         for t in self.tenants:
@@ -513,7 +673,7 @@ class RuntimeReport:
         raise KeyError(name)
 
     def as_dict(self) -> dict:
-        return {
+        d = {
             "hardware": self.hardware,
             "budget": self.budget,
             "channels": self.channels,
@@ -527,6 +687,11 @@ class RuntimeReport:
             "renegotiation_freed_bytes": self.renegotiation_freed_bytes,
             "renegotiation_solve_ms": self.renegotiation_solve_ms,
         }
+        if self.device_peaks is not None:
+            d["device_peaks"] = dict(self.device_peaks)
+        if self.link is not None:
+            d["link"] = dict(self.link)
+        return d
 
 
 # ------------------------------------------------------------------- engine
@@ -553,34 +718,101 @@ class MemoryRuntime:
         replanner: Replanner | None = None,
         replan_scorer: str = "swdoa",
         replan_size_threshold: int = 1 << 20,
+        link: HostLink | None = None,
+        contention_aware: bool = True,
     ):
         if prefetch not in ("backsched", "eager"):
             raise ValueError(f"unknown prefetch policy {prefetch!r}")
         self.hw = hw
-        self.budget = budget
-        self.num_channels = channels
+        self.budget = budget                 # per device pool
+        self.num_channels = channels         # per device pool
         self.prefetch = prefetch
         self.renegotiate = renegotiate
         self.replanner = replanner
         self.replan_scorer = replan_scorer
         self.replan_size_threshold = replan_size_threshold
+        # Mesh execution: the shared host-link bandwidth pool every device's
+        # channels contend on (None = contention-free, the legacy model).
+        # ``contention_aware`` lets prefetch back-scheduling budget the
+        # effective lane bandwidth and the planned collective blackouts;
+        # with False the link still constrains the physics but transfers are
+        # scheduled as if it were private (the contention-blind baseline
+        # benchmarks compare against).
+        self.link = link
+        self.contention_aware = contention_aware
+        # Default (None) device pool, plus one pool per named Tenant.device.
+        # The attribute names acct/channels/pending_outs keep the legacy
+        # single-device surface tests and callers rely on.
         self.channels = ChannelPool.make(channels)
         self.acct = PoolAccountant(budget)
         self.pending_outs: list[_PendingOut] = []
+        self._accts: dict[str | None, PoolAccountant] = {None: self.acct}
+        self._chans: dict[str | None, ChannelPool] = {None: self.channels}
+        self._pending: dict[str | None, list[_PendingOut]] = {None: self.pending_outs}
         self.runs: dict[str, _TenantRun] = {}
         # Run-loop state (owned by run(); instance-level so _TenantRun
-        # barrier callbacks can reach it).
+        # barrier callbacks can reach it).  Reservation accounting is per
+        # device pool.
         self._arrivals: deque[Tenant] = deque()
         self._waiting: deque[Tenant] = deque()
         self._running: list[_TenantRun] = []
         self._reports: dict[str, TenantReport] = {}
-        self._reserved = 0
-        self._promised = 0       # bytes staged replans will free at barriers
+        self._reserved: dict[str | None, int] = {}
+        self._promised: dict[str | None, int] = {}  # bytes staged replans will free
         self._now = 0.0
         self._reneg_applied = 0
         self._reneg_cancelled = 0
         self._reneg_freed = 0
         self._reneg_solve_ms = 0.0
+
+    # ----------------------------------------------------- device pools
+    def acct_for(self, device: str | None) -> PoolAccountant:
+        acct = self._accts.get(device)
+        if acct is None:
+            acct = self._accts[device] = PoolAccountant(self.budget)
+        return acct
+
+    def channels_for(self, device: str | None) -> ChannelPool:
+        chans = self._chans.get(device)
+        if chans is None:
+            chans = self._chans[device] = ChannelPool.make(self.num_channels)
+        return chans
+
+    def pending_for(self, device: str | None) -> "list[_PendingOut]":
+        pending = self._pending.get(device)
+        if pending is None:
+            pending = self._pending[device] = []
+        return pending
+
+    # ------------------------------------------------------- transfers
+    def xfer_seconds(self, size: int) -> float:
+        """Duration of one swap transfer: the device link, further capped by
+        the shared host-link lane bandwidth when a HostLink is configured."""
+        if self.link is None:
+            return size / self.hw.link_bw
+        return size / min(self.hw.link_bw, self.link.lane_bw)
+
+    def acquire_transfer(
+        self, run: "_TenantRun", direction: str, ready_t: float, size: int
+    ) -> tuple[float, float, int]:
+        """Schedule one swap transfer for ``run``: it must hold the device's
+        directional DMA channel and (when a HostLink is configured) a global
+        link lane, and is shifted past any collective blackout."""
+        chans = run.chans
+        if self.link is None:
+            return chans.acquire(direction, ready_t, size / self.hw.link_bw)
+        ids = chans.out_ids if direction == "out" else chans.in_ids
+        ch = min(ids, key=lambda c: chans.free_at[c])
+        lane = min(range(self.link.lanes), key=lambda l: self.link.free_at[l])
+        duration = self.xfer_seconds(size)
+        start = max(ready_t, chans.free_at[ch], self.link.free_at[lane])
+        start = self.link.next_clear(start, duration)
+        end = start + duration
+        chans.free_at[ch] = end
+        self.link.free_at[lane] = end
+        self.link.bytes_moved += size
+        self.link.transfers += 1
+        return start, end, ch
 
     # -------------------------------------------------------- admission path
     def _unschedulable(self, cand: Tenant, floor: int) -> None:
@@ -590,11 +822,15 @@ class MemoryRuntime:
             stalls=0, delayed_mallocs=0, admitted_at=-1.0,
             finished_at=-1.0, queue_wait_s=0.0, arrival_t=cand.arrival_t,
             priority=cand.priority, iterations=cand.iterations,
+            device=cand.device,
         )
 
     def _try_admit(self, clock: float) -> None:
-        """Admit waiting tenants FIFO while their floors fit; ``clock`` is
-        the simulated time of the event that may have freed reservation."""
+        """Admit waiting tenants FIFO while their floors fit the budget of
+        their device pool; ``clock`` is the simulated time of the event that
+        may have freed reservation.  The queue stays globally FIFO: a
+        head-of-line tenant whose device is full blocks later arrivals even
+        to other devices (admission order is part of the contract)."""
         while self._waiting:
             cand = self._waiting[0]
             floor = cand.resident_floor()
@@ -603,10 +839,11 @@ class MemoryRuntime:
                 self._waiting.popleft()
                 self._unschedulable(cand, floor)
                 continue
-            if self.budget is not None and self._reserved + floor > self.budget:
+            reserved = self._reserved.get(cand.device, 0)
+            if self.budget is not None and reserved + floor > self.budget:
                 return  # FIFO: head-of-line waits for floor to free up
             self._waiting.popleft()
-            self._reserved += floor
+            self._reserved[cand.device] = reserved + floor
             run = _TenantRun(cand, self.hw, self, admit_t=max(clock, cand.arrival_t))
             self.runs[cand.name] = run
             self._running.append(run)
@@ -646,12 +883,18 @@ class MemoryRuntime:
         floor = head.resident_floor()
         if floor > self.budget:
             return  # unschedulable; _try_admit reports it
-        needed = self._reserved - self._promised + floor - self.budget
+        needed = (
+            self._reserved.get(head.device, 0)
+            - self._promised.get(head.device, 0)
+            + floor
+            - self.budget
+        )
         if needed <= 0:
             return  # staged re-plans already free enough; wait for barriers
         victims = [
             r for r in self._running
             if r.replan_pending is None and r.has_future_barrier()
+            and r.device == head.device  # only same-pool bytes can help
         ]
         victims.sort(key=lambda r: (r.priority, -r.floor, r.name))
         for v in victims:
@@ -663,7 +906,9 @@ class MemoryRuntime:
             if new_floor > new_limit:
                 continue  # solver could not push the floor low enough
             v.replan_pending = (list(decisions), new_floor, solve_ms)
-            self._promised += v.floor - new_floor
+            self._promised[v.device] = (
+                self._promised.get(v.device, 0) + v.floor - new_floor
+            )
             return
 
     def _on_barrier(self, run: _TenantRun) -> None:
@@ -678,7 +923,7 @@ class MemoryRuntime:
         decisions, new_floor, solve_ms = staged
         run.replan_pending = None
         freed = run.floor - new_floor
-        self._promised -= freed
+        self._promised[run.device] = self._promised.get(run.device, 0) - freed
         if not self._waiting:
             # Nobody waits anymore (a finish admitted them): keep the
             # better plan, don't shrink for no one.
@@ -686,7 +931,7 @@ class MemoryRuntime:
             return
         run._install_decisions(decisions)
         run.floor = new_floor
-        self._reserved -= freed
+        self._reserved[run.device] = self._reserved.get(run.device, 0) - freed
         run.renegotiations += 1
         run.reneg_freed_bytes += freed
         run.reneg_solve_ms += solve_ms
@@ -699,11 +944,13 @@ class MemoryRuntime:
     # -------------------------------------------------------------- run loop
     def _finish(self, run: _TenantRun) -> None:
         self._running.remove(run)
-        self._reserved -= run.floor
+        self._reserved[run.device] = self._reserved.get(run.device, 0) - run.floor
         if run.replan_pending is not None:
             # Departure beat the barrier: the staged shrink never applied.
             _, new_floor, _ = run.replan_pending
-            self._promised -= run.floor - new_floor
+            self._promised[run.device] = (
+                self._promised.get(run.device, 0) - (run.floor - new_floor)
+            )
             run.replan_pending = None
             self._reneg_cancelled += 1
         run.release_residency()
@@ -714,7 +961,7 @@ class MemoryRuntime:
             name=run.name, status="completed", baseline_s=base,
             duration_s=dur,
             overhead=max(0.0, (dur - base) / base) if base > 0 else 0.0,
-            peak_resident=self.acct.peak.get(run.name, 0),
+            peak_resident=run.acct.peak.get(run.name, 0),
             floor=run.floor, stalls=run.stalls,
             delayed_mallocs=run.delayed, admitted_at=run.admit_t,
             finished_at=run.t, queue_wait_s=run.admit_t - run.arrival_t,
@@ -723,6 +970,7 @@ class MemoryRuntime:
             renegotiations=run.renegotiations,
             renegotiation_freed_bytes=run.reneg_freed_bytes,
             renegotiation_solve_ms=run.reneg_solve_ms,
+            device=run.device,
         )
         self._try_admit(run.t)
         self._maybe_renegotiate()
@@ -739,8 +987,8 @@ class MemoryRuntime:
         self._waiting.clear()
         self._running = []
         self._reports = {}
-        self._reserved = 0
-        self._promised = 0
+        self._reserved = {}
+        self._promised = {}
         self._now = 0.0
 
         while self._arrivals or self._waiting or self._running:
@@ -768,19 +1016,39 @@ class MemoryRuntime:
                 self._finish(run)
 
         ordered = [self._reports[n] for n in order if n in self._reports]
+        named_devices = sorted(d for d in self._accts if d is not None)
         return RuntimeReport(
             hardware=self.hw.name,
             budget=self.budget,
             channels=self.num_channels,
             tenants=ordered,
-            aggregate_peak=self.acct.aggregate_peak,
-            overflow_events=self.acct.overflow_events,
+            # Sum of per-device-pool peaks: on the legacy single-pool shape
+            # this is exactly the shared pool's aggregate peak.
+            aggregate_peak=sum(a.aggregate_peak for a in self._accts.values()),
+            overflow_events=sum(a.overflow_events for a in self._accts.values()),
             makespan_s=self._now,
             policy="renegotiate" if self.renegotiate else "fifo",
             renegotiations=self._reneg_applied,
             renegotiations_cancelled=self._reneg_cancelled,
             renegotiation_freed_bytes=self._reneg_freed,
             renegotiation_solve_ms=self._reneg_solve_ms,
+            device_peaks=(
+                {d: self._accts[d].aggregate_peak for d in named_devices}
+                if named_devices
+                else None
+            ),
+            link=(
+                None
+                if self.link is None
+                else {
+                    "total_bw": self.link.total_bw,
+                    "lanes": self.link.lanes,
+                    "lane_bw": self.link.lane_bw,
+                    "bytes_moved": self.link.bytes_moved,
+                    "transfers": self.link.transfers,
+                    "blackout_s": self.link.blackout_s,
+                }
+            ),
         )
 
 

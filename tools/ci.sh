@@ -38,5 +38,15 @@ echo "== churn smoke benchmark: renegotiation vs FIFO queueing =="
 python -m benchmarks.bench_churn --smoke --out "${TMPDIR:-/tmp}/BENCH_churn_smoke.json" \
   || { echo "FAIL churn bench"; status=1; }
 
+echo "== dist smoke benchmark: per-shard plans + host-link contention gates =="
+# Exits non-zero unless the per-device planned peak stays within the shard
+# fraction of the replicated plan (+ replicated bytes), the shared-link
+# contention model moves at least one swap transfer vs the contention-free
+# baseline, the collective-aware schedule is never worse than the
+# contention-blind one, and 1x1-mesh plans stay byte-identical to the
+# single-device pipeline.  Committed BENCH_dist.json is the full-mode run.
+python -m benchmarks.bench_dist --smoke --out "${TMPDIR:-/tmp}/BENCH_dist_smoke.json" \
+  || { echo "FAIL dist bench"; status=1; }
+
 [ "$status" -eq 0 ] && echo "CI OK" || echo "CI FAILED"
 exit "$status"
