@@ -1,0 +1,298 @@
+"""Engine throughput benchmark: vectorized event core vs frozen reference.
+
+PR 6 rewrote ``runtime/engine.py``'s hot paths onto precomputed structures
+(prefetch index, pending-out heap, bisected collective windows, heapq event
+frontier, per-decision due constants); ``runtime/_engine_reference.py`` is
+the pre-vectorization engine, frozen verbatim.  This benchmark runs the same
+workloads through both and reports events/sec plus the speedup, with every
+cell checked for *identical* simulated reports (``simulated_report_dict``):
+
+  * **churn** — a seeded 1000-tenant Poisson arrival storm (the fleet shape
+    from the ROADMAP's "thousand-tenant meshes" item).  The reference's
+    min-over-running-tenants scan is O(N) per event, so this is where
+    near-linear matters.  The fast engine runs in fleet configuration
+    (``record_events=False``); the events-recorded figure is reported too.
+  * **churn_reneg** — a tighter budget with renegotiation on and
+    ``capture_snapshots=True``: every barrier snapshot is resumed and the
+    suffix-only replay must reproduce the full-horizon report byte for byte.
+  * **mesh_data4** — a data=4 mesh shape (per-device pools, tagged
+    collectives, contended ``HostLink``) built directly from Tenants.
+
+Acceptance (gated in ``tools/ci.sh`` via smoke mode; the committed
+``BENCH_engine.json`` comes from a full run):
+  * every cell reports ``reports_equal: true``;
+  * suffix replay is byte-identical to full replay;
+  * full mode only: >=10x events/sec on the 1000-tenant churn workload
+    (wall-time assertions are left out of smoke — ``tools/check_enginetime.py``
+    gates the timing ratio against its committed baseline with a noise
+    floor and retry instead).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_engine [--smoke] [--out BENCH_engine.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.common import write_bench_json
+from repro.core.autoswap import AutoSwapPlanner
+from repro.core.simulator import GTX_1080TI
+from repro.runtime import _engine_reference as ref_engine
+from repro.runtime import engine as fast_engine
+from repro.runtime import planned_peak, poisson_workload, synthetic_train_trace
+from repro.runtime.engine import simulated_report_dict
+
+HW = GTX_1080TI
+SIZE_THRESHOLD = 1 << 20
+LIMIT_FRAC = 0.7
+SPEEDUP_TARGET = 10.0     # full-mode churn cell, fast vs frozen reference
+
+TEMPLATE_LAYERS = {"small": 4, "medium": 6, "large": 8}
+
+
+def solve_template(trace):
+    pl = AutoSwapPlanner(trace, HW, size_threshold=SIZE_THRESHOLD)
+    limit = int(pl.peak_load * LIMIT_FRAC)
+    return limit, pl.select(limit, "swdoa")
+
+
+def build_templates():
+    templates = {n: synthetic_train_trace(l) for n, l in TEMPLATE_LAYERS.items()}
+    plans = {n: solve_template(t) for n, t in templates.items()}
+    floors = {n: planned_peak(templates[n], p[1]) for n, p in plans.items()}
+    return templates, plans, floors
+
+
+def canon(report) -> str:
+    return json.dumps(simulated_report_dict(report), sort_keys=True)
+
+
+def churn_tenants(mod, templates, plans, items):
+    out = []
+    for it in items:
+        limit, decisions = plans[it.template]
+        out.append(
+            mod.Tenant(
+                it.name, templates[it.template], list(decisions), limit=limit,
+                iterations=it.iterations, arrival_t=it.arrival_t,
+                priority=it.priority,
+            )
+        )
+    return out
+
+
+def mesh_tenants(mod, templates, plans, devices=4, iterations=3):
+    """Data-parallel mesh shape built directly from Tenants (jax-free):
+    one shard per device, tagged collectives, first device owns blackouts."""
+    out = []
+    names = list(TEMPLATE_LAYERS)
+    for i in range(devices):
+        name = names[i % len(names)]
+        trace = templates[name]
+        limit, decisions = plans[name]
+        colls = {2: 0.004, trace.num_indices - 2: 0.006}
+        out.append(
+            mod.Tenant(
+                f"shard{i}", trace, list(decisions), limit=limit,
+                iterations=iterations, device=f"d{i}", collectives=colls,
+                collective_owner=(i == 0),
+            )
+        )
+    return out
+
+
+def timed_run(mod, make_tenants, **kw):
+    """Build fresh tenants, run one engine, return (report, wall_seconds)."""
+    link = kw.pop("link", None)
+    rt = mod.MemoryRuntime(
+        HW,
+        link=mod.HostLink.make(*link) if link else None,
+        replan_size_threshold=SIZE_THRESHOLD,
+        **kw,
+    )
+    tenants = make_tenants(mod)
+    t0 = time.perf_counter()
+    report = rt.run(tenants)
+    return rt, report, time.perf_counter() - t0
+
+
+def churn_cell(templates, plans, floors, smoke: bool, seed: int) -> dict:
+    """The headline cell: a Poisson arrival storm at fleet concurrency."""
+    if smoke:
+        n, rate_hz, iters, conc = 120, 20_000.0, (2, 3), 150
+    else:
+        n, rate_hz, iters, conc = 1000, 100_000.0, (3, 5), 1100
+    items = poisson_workload(
+        list(TEMPLATE_LAYERS), n, rate_hz, seed=seed, iterations=iters
+    )
+    mean_floor = sum(floors.values()) / len(floors)
+    budget = int(mean_floor * conc)
+    mk = lambda mod: churn_tenants(mod, templates, plans, items)
+
+    _, fast_rep, fast_s = timed_run(
+        fast_engine, mk, budget=budget, channels=2, record_events=False)
+    _, fast_ev_rep, fast_events_s = timed_run(
+        fast_engine, mk, budget=budget, channels=2, record_events=True)
+    _, ref_rep, ref_s = timed_run(ref_engine, mk, budget=budget, channels=2)
+
+    events = fast_rep.engine["events"]
+    return {
+        "tenants": n,
+        "budget": budget,
+        "events": events,
+        "fast_s": fast_s,
+        "fast_events_recorded_s": fast_events_s,
+        "ref_s": ref_s,
+        "fast_events_per_s": events / fast_s if fast_s else 0.0,
+        "ref_events_per_s": events / ref_s if ref_s else 0.0,
+        "speedup": ref_s / fast_s if fast_s else 0.0,
+        "speedup_events_recorded": ref_s / fast_events_s if fast_events_s else 0.0,
+        "reports_equal": canon(fast_rep) == canon(ref_rep)
+        and canon(fast_ev_rep) == canon(ref_rep),
+    }
+
+
+def churn_reneg_cell(templates, plans, floors, smoke: bool, seed: int) -> dict:
+    """Tight budget + renegotiation + barrier snapshots: correctness of the
+    suffix-only replay next to the fast-vs-reference report equality."""
+    n = 12 if smoke else 120
+    items = poisson_workload(
+        ["small", "medium"], n, 50.0, seed=seed, iterations=(1, 3))
+    base = fast_engine.Tenant(
+        "base", templates["large"], list(plans["large"][1]),
+        limit=plans["large"][0], iterations=max(6, n // 2), priority=0.5)
+    budget = floors["large"] + (floors["small"] + floors["medium"]) // 2
+
+    def mk(mod):
+        ts = [mod.Tenant(
+            "base", templates["large"], list(plans["large"][1]),
+            limit=plans["large"][0], iterations=base.iterations, priority=0.5)]
+        return ts + churn_tenants(mod, templates, plans, items)
+
+    # Timing run without snapshots (capturing deepcopies the whole engine at
+    # every applied barrier — that cost belongs to the feature, not the
+    # engine); a second, untimed capture run drives the suffix-replay check.
+    _, fast_rep, fast_s = timed_run(
+        fast_engine, mk, budget=budget, channels=2, renegotiate=True)
+    _, ref_rep, ref_s = timed_run(
+        ref_engine, mk, budget=budget, channels=2, renegotiate=True)
+    frt, cap_rep, _ = timed_run(
+        fast_engine, mk, budget=budget, channels=2, renegotiate=True,
+        capture_snapshots=True)
+
+    full = canon(fast_rep)
+    assert canon(cap_rep) == full, "capture_snapshots changed the run"
+    replayed = 0
+    suffix_ok = True
+    for snap in frt.barrier_snapshots:
+        resumed = snap.resume()
+        suffix_ok &= canon(resumed) == full
+        replayed += 1
+
+    events = fast_rep.engine["events"]
+    return {
+        "tenants": n + 1,
+        "budget": budget,
+        "events": events,
+        "renegotiations": fast_rep.renegotiations,
+        "snapshots_replayed": replayed,
+        "fast_s": fast_s,
+        "ref_s": ref_s,
+        "fast_events_per_s": events / fast_s if fast_s else 0.0,
+        "speedup": ref_s / fast_s if fast_s else 0.0,
+        "reports_equal": full == canon(ref_rep),
+        "suffix_replay_identical": suffix_ok and replayed > 0,
+    }
+
+
+def mesh_cell(templates, plans, smoke: bool) -> dict:
+    """data=4 mesh: per-device pools, collectives, contended HostLink."""
+    iterations = 3 if smoke else 50
+    mk = lambda mod: mesh_tenants(mod, templates, plans, 4, iterations)
+    _, fast_rep, fast_s = timed_run(
+        fast_engine, mk, channels=2, link=(HW.link_bw, 2))
+    _, ref_rep, ref_s = timed_run(
+        ref_engine, mk, channels=2, link=(HW.link_bw, 2))
+    events = fast_rep.engine["events"]
+    return {
+        "devices": 4,
+        "iterations": iterations,
+        "events": events,
+        "fast_s": fast_s,
+        "ref_s": ref_s,
+        "fast_events_per_s": events / fast_s if fast_s else 0.0,
+        "speedup": ref_s / fast_s if fast_s else 0.0,
+        "reports_equal": canon(fast_rep) == canon(ref_rep),
+    }
+
+
+def run(smoke: bool = False, seed: int = 11) -> dict:
+    """All cells; importable by tools/check_enginetime.py."""
+    templates, plans, floors = build_templates()
+    churn = churn_cell(templates, plans, floors, smoke, seed)
+    reneg = churn_reneg_cell(templates, plans, floors, smoke, seed)
+    mesh = mesh_cell(templates, plans, smoke)
+    all_equal = (
+        churn["reports_equal"] and reneg["reports_equal"] and mesh["reports_equal"]
+    )
+    return {
+        "mode": "smoke" if smoke else "full",
+        "hardware": HW.name,
+        "seed": seed,
+        "limit_frac": LIMIT_FRAC,
+        "churn": churn,
+        "churn_reneg": reneg,
+        "mesh_data4": mesh,
+        "all_reports_equal": all_equal,
+        "suffix_replay_identical": reneg["suffix_replay_identical"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workloads for CI; skips the wall-time gate")
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args(argv)
+
+    result = run(smoke=args.smoke, seed=args.seed)
+
+    ok_equal = result["all_reports_equal"]
+    ok_suffix = result["suffix_replay_identical"]
+    # Wall time is too noisy to gate at smoke scale (check_enginetime gates
+    # the ratio with a noise floor + retry); the full run must hit 10x.
+    ok_speedup = args.smoke or result["churn"]["speedup"] >= SPEEDUP_TARGET
+    result["acceptance"] = {
+        "all_reports_equal": ok_equal,
+        "suffix_replay_identical": ok_suffix,
+        "churn_speedup_10x": ok_speedup,
+    }
+    write_bench_json(args.out, result)
+
+    c, r, m = result["churn"], result["churn_reneg"], result["mesh_data4"]
+    print(f"engine ({result['mode']}): fast vs frozen reference")
+    print(
+        f"  churn      {c['tenants']:5d} tenants  {c['events']:7d} events  "
+        f"{c['fast_events_per_s']:10.0f} ev/s fast  {c['ref_events_per_s']:9.0f} ev/s ref  "
+        f"speedup {c['speedup']:5.2f}x  equal={c['reports_equal']}"
+    )
+    print(
+        f"  churn+reneg {r['tenants']:4d} tenants  {r['events']:7d} events  "
+        f"speedup {r['speedup']:5.2f}x  re-plans {r['renegotiations']}  "
+        f"suffix replays {r['snapshots_replayed']} identical={r['suffix_replay_identical']}"
+    )
+    print(
+        f"  mesh data=4 {m['iterations']:4d} iters  {m['events']:7d} events  "
+        f"speedup {m['speedup']:5.2f}x  equal={m['reports_equal']}"
+    )
+    print(f"wrote {args.out}; acceptance: {result['acceptance']}")
+    return 0 if (ok_equal and ok_suffix and ok_speedup) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -149,6 +149,11 @@ def simulate_swap_schedule(
     (one out + one in — exactly the paper's two serialized streams).  Wider
     or narrower DMA engines, and multiple tenants sharing one budget, go
     through ``repro.runtime`` directly.
+
+    The engine's hot paths were vectorized in PR 6 (prefetch index, pending
+    heap, event frontier); this facade's results are pinned bit-for-bit
+    against the frozen pre-vectorization engine
+    (``runtime/_engine_reference.py``) by tests/test_engine_equiv.py.
     """
     from ..runtime.engine import simulate_program  # deferred: runtime imports core
 

@@ -89,6 +89,7 @@ def run_mesh(
     contended: bool = True,
     contention_aware: bool = True,
     prefetch: str = "backsched",
+    record_events: bool = True,
 ) -> MeshRunResult:
     """Execute the solved per-device plans mesh-wide.
 
@@ -97,6 +98,10 @@ def run_mesh(
     complex host.  ``link_lanes`` defaults to 2 (one out + one in lane
     globally).  ``contended=False`` removes the shared link entirely
     (every device gets its full private bandwidth — the upper bound).
+
+    ``record_events=False`` drops the per-transfer logs for long-horizon
+    runs; ``schedules`` is then empty (``schedules_differ`` needs the logs,
+    so keep the default when comparing schedule variants).
     """
     link = None
     if contended:
@@ -111,15 +116,20 @@ def run_mesh(
         prefetch=prefetch,
         link=link,
         contention_aware=contention_aware,
+        record_events=record_events,
     )
     report = rt.run(mesh_tenants(solved, iterations=iterations))
-    schedules = {
-        name: {
-            "out": [(v, s, e) for v, s, e, _ in run.out_events],
-            "in": [(v, s, e) for v, s, e, _ in run.in_events],
+    schedules = (
+        {
+            name: {
+                "out": [(v, s, e) for v, s, e, _ in run.out_events],
+                "in": [(v, s, e) for v, s, e, _ in run.in_events],
+            }
+            for name, run in rt.runs.items()
         }
-        for name, run in rt.runs.items()
-    }
+        if record_events
+        else {}
+    )
     return MeshRunResult(
         report=report,
         contended=contended,

@@ -27,6 +27,7 @@ from .engine import (
     TenantReport,
     planned_peak,
     simulate_program,
+    simulated_report_dict,
 )
 from .tenants import (
     ColocationResult,
@@ -47,6 +48,7 @@ __all__ = [
     "TenantReport",
     "planned_peak",
     "simulate_program",
+    "simulated_report_dict",
     "ColocationResult",
     "colocate_programs",
     "pipeline_replanner",

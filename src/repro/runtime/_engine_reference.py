@@ -1,4 +1,20 @@
-"""Discrete-event memory runtime: N tenant programs, K DMA channels, one HBM.
+"""FROZEN reference copy of the pre-vectorization runtime engine (PR 6).
+
+Do not optimize or extend this module.  It is the per-event pure-Python
+engine exactly as it shipped after PR 5 — per-step ``sorted(upcoming)``
+prefetch scans, O(n) ``pending.remove`` / ``min(pending, ...)`` walks, a
+linear ``_planned_blackout_s`` window walk, and a ``min``-over-running-
+tenants event frontier.  ``runtime/engine.py`` rewrote those hot paths onto
+precomputed, array-structured state; this copy pins the rewrite bit-for-bit
+(tests/test_engine_equiv.py, benchmarks/bench_engine.py) and doubles as the
+per-machine speed normalizer for ``tools/check_enginetime.py``, exactly the
+way ``core/_solver_reference.py`` froze the PR 3 solvers.
+
+Original module docstring follows.
+
+---
+
+Discrete-event memory runtime: N tenant programs, K DMA channels, one HBM.
 
 This is the execution layer on top of the ``repro.plan`` IR.  The paper's
 simulator (formerly the event loop inside ``core/simulator.py``) replayed ONE
@@ -49,36 +65,11 @@ near-linear SwapSelection solve path, so this is cheap enough to do online),
 applies the shrunken plan at the victim's next iteration barrier, and admits
 the newcomer into the freed reservation.  When no victim can free enough
 bytes the newcomer falls back to plain FIFO queueing.
-
-**Vectorized event core** (PR 6): the hot paths run on precomputed,
-array-structured state, pinned bit-for-bit against the frozen per-event
-engine in ``runtime/_engine_reference.py`` the way PR 3 pinned the solvers:
-
-  * the per-step ``sorted(upcoming)`` prefetch scan is a per-op *prefetch
-    index* built once in ``_install_decisions`` (decisions stably pre-sorted
-    by deadline, walked with in-place compaction as variables swap back in);
-  * the O(P) ``pending.remove`` / ``min(pending, ...)`` walks over in-flight
-    swap-outs are a lazy-deletion *done-time heap* (``_PendingQueue``);
-  * the ``_planned_blackout_s`` linear collective-window walk is
-    bisect-bounded by prefix indexes over ``_coll_windows``;
-  * the ``run()`` min-over-running-tenants scan is a heapq *event frontier*
-    keyed (clock, admission order), so picking the next event is O(log N)
-    instead of O(N) — the term that dominated thousand-tenant horizons.
-
-Renegotiation replay is *suffix-only*: with ``capture_snapshots=True`` the
-engine snapshots its whole state (accountants, channels, pending heaps,
-tenant runs) at every barrier where a re-plan applies, and ``resume()`` on a
-snapshot re-simulates only the horizon after that barrier — byte-identical
-to replaying the full horizon from t=0 (``benchmarks/bench_engine.py``
-gates this).
 """
 
 from __future__ import annotations
 
 import bisect
-import copy
-import heapq
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
@@ -120,10 +111,7 @@ class ChannelPool:
     def acquire(self, direction: str, ready_t: float, duration: float) -> tuple[float, float, int]:
         """Reserve the earliest-free channel of `direction`; returns (start, end, channel)."""
         ids = self.out_ids if direction == "out" else self.in_ids
-        if len(ids) == 1:
-            ch = ids[0]
-        else:
-            ch = min(ids, key=lambda c: self.free_at[c])
+        ch = min(ids, key=lambda c: self.free_at[c])
         start = max(ready_t, self.free_at[ch])
         end = start + duration
         self.free_at[ch] = end
@@ -325,50 +313,6 @@ class _PendingOut:
     owner: "_TenantRun"
     var: int
     size: int
-    seq: int = 0          # global append order, the heap tie-break
-    retired: bool = False
-
-
-class _PendingQueue:
-    """Done-time-ordered in-flight swap-outs for one device pool.
-
-    The reference engine kept a plain list and ran ``min(pending, key=...)``
-    plus ``pending.remove(rec)`` on every budget wait and retirement — O(P)
-    per event.  This is a lazy-deletion heap keyed (done_t, seq): ``seq`` is
-    the append order, so ties pop exactly the record ``min`` returned (first
-    occurrence), and retiring a record marks it dead in place instead of
-    scanning the list.  Owners keep their own (done_t, seq) heaps over the
-    same records for the per-tenant drains (iteration barriers, finishes).
-    """
-
-    __slots__ = ("_heap", "_live")
-
-    def __init__(self) -> None:
-        self._heap: list[tuple[float, int, _PendingOut]] = []
-        self._live = 0
-
-    def __bool__(self) -> bool:
-        return self._live > 0
-
-    def push(self, rec: _PendingOut) -> None:
-        heapq.heappush(self._heap, (rec.done_t, rec.seq, rec))
-        self._live += 1
-
-    def pop_min(self) -> _PendingOut:
-        """Remove and return the earliest-completing live record."""
-        heap = self._heap
-        while heap:
-            rec = heapq.heappop(heap)[2]
-            if not rec.retired:
-                rec.retired = True
-                self._live -= 1
-                return rec
-        raise IndexError("pop from empty pending queue")
-
-    def retire(self, rec: _PendingOut) -> None:
-        """Mark a live record dead; its heap entry is skipped when reached."""
-        rec.retired = True
-        self._live -= 1
 
 
 class _TenantRun:
@@ -382,7 +326,7 @@ class _TenantRun:
         self.engine = engine
         self.device = tenant.device
         # Per-device shared state: tenants on the same device share one HBM
-        # accountant, one DMA channel pool and one pending-swap-out queue;
+        # accountant, one DMA channel pool and one pending-swap-out list;
         # the default device (None) keeps the legacy single-pool shape.
         self.acct = engine.acct_for(tenant.device)
         self.chans = engine.channels_for(tenant.device)
@@ -404,11 +348,7 @@ class _TenantRun:
         self.renegotiations = 0
         self.reneg_freed_bytes = 0
         self.reneg_solve_ms = 0.0
-        self._record = engine.record_events
-        # Engine knobs are fixed for the life of a run: cache the attribute
-        # chains the per-step hot loop would otherwise chase every event.
-        self._budget_guard = engine.budget is not None
-        self._backsched = engine.prefetch == "backsched"
+        self._install_decisions(tenant.decisions)
 
         n = trace.num_indices
         self.delta = [0] * (n + 1)
@@ -420,19 +360,6 @@ class _TenantRun:
                 self.delta[v.free_index] -= v.size
 
         self.bt = trace.op_times  # baseline schedule, for prefetch back-scheduling
-        # Op durations are pure functions of the (immutable) cost table:
-        # evaluate the roofline expression once per index instead of on
-        # every step/_due call.  Same expression, same floats.
-        costs = self.costs
-        durs = []
-        for j in range(len(self.bt)):
-            flops, nbytes = costs.get(j, (0.0, 0.0))
-            if flops or nbytes:
-                durs.append(max(flops / hw.eff_flops, nbytes / hw.hbm_bw) + hw.op_overhead_s)
-            else:
-                durs.append(0.0)
-        self._op_durs = durs
-        self._install_decisions(tenant.decisions)
 
         # Collective windows on the baseline timeline (for contention-aware
         # back-scheduling): the collective at op i occupies the interconnect
@@ -444,16 +371,6 @@ class _TenantRun:
             for i, d in self.collectives.items()
             if d > 0.0
         )
-        # Window index for _planned_blackout_s: starts are sorted, and the
-        # running max of ends is monotone, so both scan bounds bisect instead
-        # of walking every earlier window on every back-scheduling query.
-        self._coll_starts = [s for s, _ in self._coll_windows]
-        self._coll_maxend: list[float] = []
-        m = float("-inf")
-        for _, e in self._coll_windows:
-            if e > m:
-                m = e
-            self._coll_maxend.append(m)
 
         self.admit_t = admit_t
         self.t = admit_t
@@ -461,14 +378,8 @@ class _TenantRun:
         self.iter_no = 0
         self.stalls = 0
         self.delayed = 0
-        self.events = 0                      # simulated op-steps executed
         self.out_events: list[tuple[int, float, float, int]] = []
         self.in_events: list[tuple[int, float, float, int]] = []
-        # Tail-spill tracking survives ``record_events=False``: the latest
-        # completion among this tenant's own swap-outs, across iterations.
-        self._own_out_end = 0.0
-        self._has_out = False
-        self._own_pending: list[tuple[float, int, _PendingOut]] = []
         self.in_done: dict[int, float] = {}
         self.out_done: dict[int, float] = {}
         self.finished = False
@@ -482,31 +393,6 @@ class _TenantRun:
         for d in self.decisions:
             self.out_at.setdefault(d.out_after, []).append(d)
             self.in_at.setdefault(d.in_before, []).append(d)
-        # Prefetch index: the reference engine re-filtered and re-sorted the
-        # whole decision list on EVERY step.  Deadline order is fixed at
-        # install time, so sort once (stably — same-deadline decisions keep
-        # install order, exactly what the per-step stable sort produced) and
-        # let each iteration walk a compacting copy (``_pf_active``).
-        #
-        # Each entry carries the decision's precomputed due-check constants:
-        # its deadline time on the baseline schedule and its transfer-time
-        # budget ``need``.  Without a HostLink (or contention-blind) the
-        # reference's ``need`` is ``size / link_bw`` — a per-decision
-        # constant; only the contention-aware-link path keeps a dynamic term
-        # (the planned collective blackout inside the shrinking window).
-        engine = self.engine
-        self._pf_dynamic = engine.link is not None and engine.contention_aware
-        bt = self.trace.op_times
-        order = sorted(self.decisions, key=lambda d: d.in_before)
-        if self._pf_dynamic:
-            needs = [engine.xfer_seconds(d.size) for d in order]
-        else:
-            needs = [d.size / self.hw.link_bw for d in order]
-        self._pf_order = [
-            (d.var, d.in_before, d.size, bt[d.in_before], need)
-            for d, need in zip(order, needs)
-        ]
-        self._pf_active: list[tuple[int, int, int, float, float]] = []
 
     def _iterations_done(self) -> bool:
         """Called at an iteration barrier, after ``iter_no`` was bumped."""
@@ -527,7 +413,10 @@ class _TenantRun:
         return self.engine.xfer_seconds(size)
 
     def _op_dur(self, i: int) -> float:
-        return self._op_durs[i]
+        flops, nbytes = self.costs.get(i, (0.0, 0.0))
+        if flops or nbytes:
+            return max(flops / self.hw.eff_flops, nbytes / self.hw.hbm_bw) + self.hw.op_overhead_s
+        return 0.0
 
     def _due(self, d: SwapDecision, i: int) -> bool:
         """Back-scheduling: is it time to start this swap-in?
@@ -559,25 +448,13 @@ class _TenantRun:
         return slack - self._op_dur(nxt) < need
 
     def _planned_blackout_s(self, a: float, b: float) -> float:
-        """Seconds of [a, b) the baseline schedule spends in collectives.
-
-        Bisect-bounded: windows before ``lo`` all end at or before ``a`` (the
-        running-max-of-ends index is monotone) and windows from ``hi`` on
-        start at or after ``b`` — exactly the entries the reference walk
-        skipped via continue/break.  The surviving overlaps are summed
-        left-to-right in the same order with the same float ops, so the
-        result is bit-for-bit the reference's.
-        """
-        windows = self._coll_windows
-        if not windows:
-            return 0.0
-        lo = bisect.bisect_right(self._coll_maxend, a)
-        hi = bisect.bisect_left(self._coll_starts, b, lo)
+        """Seconds of [a, b) the baseline schedule spends in collectives."""
         total = 0.0
-        for j in range(lo, hi):
-            s, e = windows[j]
+        for s, e in self._coll_windows:
             if e <= a:
                 continue
+            if s >= b:
+                break
             total += min(e, b) - max(s, a)
         return total
 
@@ -591,7 +468,6 @@ class _TenantRun:
                 self.acct.add(self.name, -d.size)
                 self.out_done[d.var] = self.t
         self.i = 0
-        self._pf_active = list(self._pf_order)
 
     def _end_iteration(self) -> bool:
         """Close one iteration; True when the whole tenant is finished."""
@@ -603,14 +479,9 @@ class _TenantRun:
         # iteration's deltas (which re-count persistent variables at index 0)
         # don't double-charge the accountant.
         acct = self.acct
-        own = self._own_pending
-        while own:
-            done_t, _, rec = heapq.heappop(own)
-            if rec.retired:
-                continue
-            if done_t > self.t:
-                self.t = done_t
-            self.pending.retire(rec)
+        for rec in [r for r in self.pending if r.owner is self]:
+            self.t = max(self.t, rec.done_t)
+            self.pending.remove(rec)
             acct.add(self.name, -rec.size)
         if self.in_done:
             self.t = max(self.t, max(self.in_done.values()))
@@ -625,14 +496,12 @@ class _TenantRun:
     # ---------------------------------------------------------------- step
     def step(self) -> bool:
         """Execute the next op; returns True when the tenant has finished."""
-        self.events += 1
         if self.i >= self.trace.num_indices:
             # Degenerate empty trace.
             self.finished = self._end_iteration()
             return self.finished
         i = self.i
         acct = self.acct
-        record = self._record
 
         # 1. If this op needs a swapped variable back, wait for its swap-in.
         for d in self.in_at.get(i, ()):
@@ -643,8 +512,7 @@ class _TenantRun:
                 start, end, ch = self.engine.acquire_transfer(self, "in", ready, d.size)
                 self.in_done[d.var] = end
                 acct.add(self.name, d.size)
-                if record:
-                    self.in_events.append((d.var, start, end, ch))
+                self.in_events.append((d.var, start, end, ch))
             if self.in_done[d.var] > self.t:
                 self.stalls += 1
                 self.t = self.in_done[d.var]
@@ -652,9 +520,10 @@ class _TenantRun:
         # 2. Budget enforcement on mallocs (paper: delay the Malloc).  Any
         # same-device tenant's pending swap-out frees shared headroom, so the
         # wait is on this device's earliest completion.
-        if self._budget_guard and self.delta[i] > 0 and i in self.malloc_size_at:
+        if self.engine.budget is not None and self.delta[i] > 0 and i in self.malloc_size_at:
             while not acct.fits(self.delta[i]) and self.pending:
-                rec = self.pending.pop_min()
+                rec = min(self.pending, key=lambda r: r.done_t)
+                self.pending.remove(rec)
                 if rec.done_t > self.t:
                     self.delayed += 1
                     self.t = rec.done_t
@@ -663,7 +532,7 @@ class _TenantRun:
         acct.mark_peak(self.name)
 
         # 3. Execute the op (compute is per-tenant; only memory is shared).
-        self.t += self._op_durs[i]
+        self.t += self._op_dur(i)
         # 3b. Collective tagged at this op: it occupies the interconnect for
         # its duration (the tenant's clock advances through it, matching the
         # baseline op_times the sharded tracer folded the duration into),
@@ -683,22 +552,12 @@ class _TenantRun:
         for d in self.out_at.get(i, ()):
             start, end, ch = self.engine.acquire_transfer(self, "out", self.t, d.size)
             self.out_done[d.var] = end
-            rec = _PendingOut(end, self, d.var, d.size, self.engine._next_seq())
-            self.pending.push(rec)
-            heapq.heappush(self._own_pending, (end, rec.seq, rec))
-            self._has_out = True
-            if end > self._own_out_end:
-                self._own_out_end = end
-            if record:
-                self.out_events.append((d.var, start, end, ch))
+            self.pending.append(_PendingOut(end, self, d.var, d.size))
+            self.out_events.append((d.var, start, end, ch))
 
         # 5. Retire this tenant's completed swap-outs (frees resident bytes).
-        own = self._own_pending
-        while own and own[0][0] <= self.t:
-            rec = heapq.heappop(own)[2]
-            if rec.retired:
-                continue
-            self.pending.retire(rec)
+        for rec in [r for r in self.pending if r.owner is self and r.done_t <= self.t]:
+            self.pending.remove(rec)
             acct.add(self.name, -rec.size)
 
         # 6. Prefetch swapped-out variables back, nearest deadline first.
@@ -712,65 +571,23 @@ class _TenantRun:
         # tenant's prefetching until room appears — and because bytes are
         # reserved at schedule time in steps 1/6, a second in-channel can
         # never admit into the same headroom.
-        #
-        # The walk runs over the prefetch index (deadline-ordered at install
-        # time) with in-place compaction: entries already swapped back in, or
-        # whose deadline has passed, drop permanently; entries not yet
-        # swapped out (or not yet due) stay for the next step.
-        active = self._pf_active
-        if active:
-            out_done = self.out_done
-            in_done = self.in_done
-            guard = self._budget_guard
-            backsched = self._backsched
-            dynamic = self._pf_dynamic
-            # The due check's step-dependent terms are shared by every
-            # candidate at this op: hoist them out of the walk.
-            bt = self.bt
-            nxt = i + 1
-            if nxt >= len(bt):
-                nxt = len(bt) - 1
-            bt_nxt = bt[nxt]
-            od_nxt = self._op_durs[nxt]
-            n_active = len(active)
-            w = r = 0
-            while r < n_active:
-                ent = active[r]
-                var = ent[0]
-                if var in in_done or ent[1] <= i:
-                    r += 1                      # permanently dead: drop
-                    continue
-                if var not in out_done:
-                    active[w] = ent; w += 1; r += 1   # not swapped out yet: keep
-                    continue
-                size = ent[2]
-                if guard and not acct.fits(size):
-                    break                       # head-of-line blocked: stop
-                if backsched:
-                    # Inlined _due: slack minus the next op's compute,
-                    # against the precomputed (plus planned-blackout, on a
-                    # contended link) transfer budget — same float ops as
-                    # the reference's per-call recomputation.
-                    in_t = ent[3]
-                    need = ent[4]
-                    if dynamic:
-                        need = need + self._planned_blackout_s(bt_nxt, in_t)
-                    if not ((in_t - bt_nxt) - od_nxt < need):
-                        active[w] = ent; w += 1; r += 1   # not due yet: keep
-                        continue
-                start, end, ch = self.engine.acquire_transfer(
-                    self, "in", max(self.t, out_done[var]), size
-                )
-                in_done[var] = end
-                acct.add(self.name, size)
-                acct.mark_peak(self.name)
-                if record:
-                    self.in_events.append((var, start, end, ch))
-                r += 1                          # now in in_done: drop
-            if w != r:
-                while r < n_active:             # keep the unexamined tail
-                    active[w] = active[r]; w += 1; r += 1
-                del active[w:]
+        upcoming = sorted(
+            (d for d in self.decisions
+             if d.var in self.out_done and d.var not in self.in_done and d.in_before > i),
+            key=lambda d: d.in_before,
+        )
+        for d in upcoming:
+            if self.engine.budget is not None and not acct.fits(d.size):
+                break
+            if self.engine.prefetch == "backsched" and not self._due(d, i):
+                continue
+            start, end, ch = self.engine.acquire_transfer(
+                self, "in", max(self.t, self.out_done[d.var]), d.size
+            )
+            self.in_done[d.var] = end
+            acct.add(self.name, d.size)
+            acct.mark_peak(self.name)
+            self.in_events.append((d.var, start, end, ch))
 
         self.i += 1
         if self.i >= self.trace.num_indices:
@@ -786,23 +603,18 @@ class _TenantRun:
         pool forever, starving later-admitted tenants.
         """
         acct = self.acct
-        own = self._own_pending
-        while own:
-            rec = heapq.heappop(own)[2]
-            if rec.retired:
-                continue
-            self.pending.retire(rec)
+        for rec in [r for r in self.pending if r.owner is self]:
+            self.pending.remove(rec)
             acct.add(self.name, -rec.size)
         acct.add(self.name, -acct.resident.get(self.name, 0))
 
     # ------------------------------------------------------------- results
     def sim_result(self) -> SimResult:
         # Tail spill is *this tenant's* swap-out traffic draining past its
-        # compute end — tracked as a running max over its own out transfers
-        # (so it survives ``record_events=False``).  The shared
+        # compute end — derived from its own out events.  The shared
         # ``channels.drain_time("out")`` would charge other tenants'
         # in-flight swap-outs to this tenant.
-        own_out_end = self._own_out_end if self._has_out else self.t
+        own_out_end = max((e for _, _, e, _ in self.out_events), default=self.t)
         res = SimResult(
             baseline_s=self.baseline_s * self.completed_iterations(),
             duration_s=self.t - self.admit_t,
@@ -845,8 +657,6 @@ class TenantReport:
     renegotiation_solve_ms: float = 0.0
     # Device pool this tenant ran against (None = the default shared device).
     device: str | None = None
-    # Engine throughput: simulated op-steps this tenant executed.
-    events: int = 0
 
     def as_dict(self) -> dict:
         return self.__dict__.copy()
@@ -871,10 +681,6 @@ class RuntimeReport:
     # aggregate peaks, and the shared HostLink's contention counters.
     device_peaks: dict[str, int] | None = None
     link: dict | None = None
-    # Engine throughput counters (simulated events, wall-clock run and
-    # renegotiation-solve seconds, events/sec).  Wall clock varies run to
-    # run; ``simulated_report_dict`` strips this for equivalence checks.
-    engine: dict | None = None
 
     def tenant(self, name: str) -> TenantReport:
         for t in self.tenants:
@@ -901,27 +707,7 @@ class RuntimeReport:
             d["device_peaks"] = dict(self.device_peaks)
         if self.link is not None:
             d["link"] = dict(self.link)
-        if self.engine is not None:
-            d["engine"] = dict(self.engine)
         return d
-
-
-def simulated_report_dict(report: "RuntimeReport") -> dict:
-    """``report.as_dict()`` reduced to the *simulated* quantities.
-
-    Drops the wall-clock engine counters (different every run) and the
-    per-tenant event counts (absent from the frozen reference engine's
-    reports), leaving exactly the fields two engines must agree on
-    bit-for-bit.  Works on fast and reference reports alike.
-    """
-    d = report.as_dict()
-    d.pop("engine", None)
-    d["renegotiation_solve_ms"] = 0.0
-    d["tenants"] = [dict(t) for t in d["tenants"]]
-    for t in d["tenants"]:
-        t.pop("events", None)
-        t["renegotiation_solve_ms"] = 0.0
-    return d
 
 
 # ------------------------------------------------------------------- engine
@@ -936,14 +722,6 @@ class MemoryRuntime:
     and the shrunken plan takes effect at the victim's next iteration
     barrier.  ``replanner`` defaults to the plan pipeline's SwapSelection
     pass (``repro.runtime.tenants.pipeline_replanner``).
-
-    ``record_events=False`` turns off per-transfer event logging (the
-    ``in_events``/``out_events`` tuples grow unbounded across iterations) —
-    keep the default for tests and schedule inspection, turn it off for
-    fleet-scale horizons.  ``capture_snapshots=True`` snapshots the full
-    engine state at every barrier where a renegotiated plan applies
-    (``barrier_snapshots``); ``resume()`` on a snapshot replays only the
-    suffix after that barrier, byte-identical to the full horizon.
     """
 
     def __init__(
@@ -958,8 +736,6 @@ class MemoryRuntime:
         replan_size_threshold: int = 1 << 20,
         link: HostLink | None = None,
         contention_aware: bool = True,
-        record_events: bool = True,
-        capture_snapshots: bool = False,
     ):
         if prefetch not in ("backsched", "eager"):
             raise ValueError(f"unknown prefetch policy {prefetch!r}")
@@ -980,17 +756,15 @@ class MemoryRuntime:
         # benchmarks compare against).
         self.link = link
         self.contention_aware = contention_aware
-        self.record_events = record_events
-        self.capture_snapshots = capture_snapshots
         # Default (None) device pool, plus one pool per named Tenant.device.
         # The attribute names acct/channels/pending_outs keep the legacy
         # single-device surface tests and callers rely on.
         self.channels = ChannelPool.make(channels)
         self.acct = PoolAccountant(budget)
-        self.pending_outs = _PendingQueue()
+        self.pending_outs: list[_PendingOut] = []
         self._accts: dict[str | None, PoolAccountant] = {None: self.acct}
         self._chans: dict[str | None, ChannelPool] = {None: self.channels}
-        self._pending: dict[str | None, _PendingQueue] = {None: self.pending_outs}
+        self._pending: dict[str | None, list[_PendingOut]] = {None: self.pending_outs}
         self.runs: dict[str, _TenantRun] = {}
         # Run-loop state (owned by run(); instance-level so _TenantRun
         # barrier callbacks can reach it).  Reservation accounting is per
@@ -1006,16 +780,6 @@ class MemoryRuntime:
         self._reneg_cancelled = 0
         self._reneg_freed = 0
         self._reneg_solve_ms = 0.0
-        # Event frontier: one (clock, admission seq, run) heap entry per
-        # running tenant — the next event pops in O(log N) instead of the
-        # reference engine's O(N) min-scan.  Ties resolve in admission order,
-        # exactly the first-in-list element ``min`` used to return.
-        self._event_heap: list[tuple[float, int, _TenantRun]] = []
-        self._admit_seq = 0
-        self._pending_seq = 0
-        self._events = 0
-        self.barrier_snapshots: list["MemoryRuntime"] = []
-        self._snapshot_due = False
 
     # ----------------------------------------------------- device pools
     def acct_for(self, device: str | None) -> PoolAccountant:
@@ -1030,16 +794,11 @@ class MemoryRuntime:
             chans = self._chans[device] = ChannelPool.make(self.num_channels)
         return chans
 
-    def pending_for(self, device: str | None) -> _PendingQueue:
+    def pending_for(self, device: str | None) -> "list[_PendingOut]":
         pending = self._pending.get(device)
         if pending is None:
-            pending = self._pending[device] = _PendingQueue()
+            pending = self._pending[device] = []
         return pending
-
-    def _next_seq(self) -> int:
-        seq = self._pending_seq
-        self._pending_seq = seq + 1
-        return seq
 
     # ------------------------------------------------------- transfers
     def xfer_seconds(self, size: int) -> float:
@@ -1104,9 +863,6 @@ class MemoryRuntime:
             run = _TenantRun(cand, self.hw, self, admit_t=max(clock, cand.arrival_t))
             self.runs[cand.name] = run
             self._running.append(run)
-            run._admit_seq = self._admit_seq
-            self._admit_seq += 1
-            heapq.heappush(self._event_heap, (run.t, run._admit_seq, run))
 
     def _drain_arrivals(self, upto: float) -> None:
         """Move arrivals with ``arrival_t <= upto`` into the admission queue,
@@ -1200,10 +956,6 @@ class MemoryRuntime:
         self._reneg_solve_ms += solve_ms
         self._try_admit(run.t)
         self._maybe_renegotiate()
-        if self.capture_snapshots:
-            # Applied at this barrier: snapshot at the next loop-top (a
-            # clean between-events point) so resume() replays the suffix.
-            self._snapshot_due = True
 
     # -------------------------------------------------------------- run loop
     def _finish(self, run: _TenantRun) -> None:
@@ -1235,44 +987,27 @@ class MemoryRuntime:
             renegotiation_freed_bytes=run.reneg_freed_bytes,
             renegotiation_solve_ms=run.reneg_solve_ms,
             device=run.device,
-            events=run.events,
         )
         self._try_admit(run.t)
         self._maybe_renegotiate()
 
-    def _snapshot(self) -> "MemoryRuntime":
-        """Deep-copy the engine mid-run, sharing the immutable heavy state.
+    def run(self, tenants: Sequence[Tenant]) -> RuntimeReport:
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            # The accountant, runs map and reports are keyed by name; two
+            # tenants sharing one would silently merge their residency.
+            raise ValueError(f"tenant names must be unique, got {names}")
+        order = names
+        # Stable sort: same-instant arrivals keep submission (FIFO) order.
+        self._arrivals = deque(sorted(tenants, key=lambda t: t.arrival_t))
+        self._waiting.clear()
+        self._running = []
+        self._reports = {}
+        self._reserved = {}
+        self._promised = {}
+        self._now = 0.0
 
-        Traces (op times/costs/variables are read-only once assigned), the
-        hardware spec and the replanner hook are shared between the live
-        engine and the snapshot; everything mutable — accountants, channel
-        pools, pending heaps, tenant runs, the event frontier — is copied,
-        so ``resume()`` on the snapshot replays the suffix independently.
-        """
-        memo: dict[int, object] = {id(self.hw): self.hw}
-        if self.replanner is not None:
-            memo[id(self.replanner)] = self.replanner
-        traces = [t.trace for t in self._arrivals]
-        traces += [t.trace for t in self._waiting]
-        traces += [r.trace for r in self._running]
-        for tr in traces:
-            memo[id(tr)] = tr
-            if tr.op_times is not None:
-                memo[id(tr.op_times)] = tr.op_times
-            if tr.op_costs is not None:
-                memo[id(tr.op_costs)] = tr.op_costs
-        snap = copy.deepcopy(self, memo)
-        snap.barrier_snapshots = []
-        snap.capture_snapshots = False
-        snap._snapshot_due = False
-        return snap
-
-    def _loop(self) -> None:
-        heap = self._event_heap
         while self._arrivals or self._waiting or self._running:
-            if self._snapshot_due:
-                self._snapshot_due = False
-                self.barrier_snapshots.append(self._snapshot())
             if not self._running:
                 if self._arrivals:
                     # Idle gap: jump the clock to the next arrival.
@@ -1282,30 +1017,20 @@ class MemoryRuntime:
                     # admits now or is unschedulable outright.
                     self._try_admit(self._now)
                 continue
-            t_event, seq, run = heapq.heappop(heap)
-            if run.finished:
-                continue  # stale entry: the tenant finished meanwhile
-            if run.t != t_event:
-                heapq.heappush(heap, (run.t, seq, run))
-                continue  # stale entry: the tenant's clock moved
+            run = min(self._running, key=lambda r: r.t)
             # Arrivals at or before this run's clock strictly precede its
             # next op (and may admit a tenant with an earlier clock).
             before = len(self._running)
             self._drain_arrivals(run.t)
             if len(self._running) != before:
-                heapq.heappush(heap, (run.t, seq, run))
                 continue  # the time frontier changed; re-pick the next event
-            self._events += 1
             if run.step():
                 # Process arrivals that landed inside the op the step just
                 # executed *before* exposing the freed reservation: the
                 # release happens at run.t, after those arrivals.
                 self._drain_arrivals(run.t)
                 self._finish(run)
-            else:
-                heapq.heappush(heap, (run.t, seq, run))
 
-    def _final_report(self, order: list[str], wall_s: float) -> RuntimeReport:
         ordered = [self._reports[n] for n in order if n in self._reports]
         named_devices = sorted(d for d in self._accts if d is not None)
         return RuntimeReport(
@@ -1340,49 +1065,7 @@ class MemoryRuntime:
                     "blackout_s": self.link.blackout_s,
                 }
             ),
-            engine={
-                "events": self._events,
-                "run_wall_s": wall_s,
-                "events_per_s": self._events / wall_s if wall_s > 0 else 0.0,
-                "solve_wall_s": self._reneg_solve_ms / 1e3,
-            },
         )
-
-    def run(self, tenants: Sequence[Tenant]) -> RuntimeReport:
-        names = [t.name for t in tenants]
-        if len(set(names)) != len(names):
-            # The accountant, runs map and reports are keyed by name; two
-            # tenants sharing one would silently merge their residency.
-            raise ValueError(f"tenant names must be unique, got {names}")
-        self._order = names
-        # Stable sort: same-instant arrivals keep submission (FIFO) order.
-        self._arrivals = deque(sorted(tenants, key=lambda t: t.arrival_t))
-        self._waiting.clear()
-        self._running = []
-        self._reports = {}
-        self._reserved = {}
-        self._promised = {}
-        self._now = 0.0
-        self._event_heap = []
-        self._events = 0
-        self.barrier_snapshots = []
-        self._snapshot_due = False
-        t0 = time.perf_counter()
-        self._loop()
-        return self._final_report(self._order, time.perf_counter() - t0)
-
-    def resume(self) -> RuntimeReport:
-        """Finish the horizon from a barrier snapshot — suffix-only replay.
-
-        Call on an element of a completed run's ``barrier_snapshots``: the
-        snapshot holds the full engine state at the barrier where a
-        renegotiated plan applied, so only the events *after* that barrier
-        are re-simulated.  The returned report is byte-identical (modulo the
-        wall-clock ``engine`` counters) to the full-horizon run's.
-        """
-        t0 = time.perf_counter()
-        self._loop()
-        return self._final_report(self._order, time.perf_counter() - t0)
 
 
 # ------------------------------------------------------- single-tenant path
@@ -1393,7 +1076,6 @@ def simulate_program(
     limit: int | None = None,
     channels: int = 2,
     prefetch: str = "backsched",
-    record_events: bool = True,
 ) -> SimResult:
     """Replay one iteration of one program — the paper's simulator, now as a
     1-tenant run of the runtime engine.  ``channels=2, prefetch="eager"``
@@ -1404,8 +1086,7 @@ def simulate_program(
     ``floor=0`` disables admission control to match the legacy contract: an
     over-limit schedule runs (with delays), it is not queued.
     """
-    rt = MemoryRuntime(hw, budget=limit, channels=channels, prefetch=prefetch,
-                       record_events=record_events)
+    rt = MemoryRuntime(hw, budget=limit, channels=channels, prefetch=prefetch)
     tenant = Tenant("t0", trace, list(decisions), limit=limit, floor=0)
     rt.run([tenant])
     return rt.runs["t0"].sim_result()

@@ -189,6 +189,7 @@ def colocate_programs(
     priorities: "dict[str, float] | None" = None,
     departures: "dict[str, float] | None" = None,
     renegotiate: bool = False,
+    record_events: bool = True,
 ) -> ColocationResult:
     """Co-schedule N solved programs under one shared HBM budget.
 
@@ -201,6 +202,9 @@ def colocate_programs(
     ``renegotiate=True`` lets the runtime shrink a running victim's plan (an
     online SwapSelection re-solve through this same pipeline and ``cache``)
     instead of only queueing a newcomer that doesn't fit.
+
+    ``record_events=False`` disables the runtime's per-transfer event logs
+    for fleet-scale horizons (the report's simulated figures are unchanged).
     """
     arrivals = arrivals or {}
     priorities = priorities or {}
@@ -234,6 +238,7 @@ def colocate_programs(
             hw, scorer=scorer, size_threshold=size_threshold, cache=cache,
             programs=named_programs,
         ),
+        record_events=record_events,
     )
     report = rt.run(tenants)
     return ColocationResult(

@@ -156,6 +156,8 @@ def test_renegotiation_disabled_matches_fifo_exactly():
     a, b, budget = churn_pair()
     r1 = run_pair(a, b, budget, renegotiate=False).as_dict()
     r2 = run_pair(a, b, budget, renegotiate=False).as_dict()
+    # The engine block carries wall-clock throughput, different every run.
+    r1.pop("engine"), r2.pop("engine")
     assert r1 == r2, "FIFO runs are deterministic"
 
 
@@ -169,6 +171,7 @@ def test_failed_renegotiation_falls_back_to_fifo():
     noop_d = noop.as_dict()
     assert noop.renegotiations == 0
     fifo.pop("policy"), noop_d.pop("policy")
+    fifo.pop("engine"), noop_d.pop("engine")  # wall clock differs per run
     assert noop_d == fifo
 
 

@@ -1,0 +1,119 @@
+"""CI regression gate for runtime-engine throughput (Issue 6).
+
+Runs the engine benchmark in smoke mode (seconds) and compares each cell
+against tools/enginetime_baseline.json, failing the build on a >1.25x
+regression — mirroring tools/check_solvetime.py, which gates the solvers
+the same way.  Report-equality or suffix-replay failures fail outright.
+
+The gated quantity is the *fast/reference time ratio* measured in the same
+process, not absolute wall time: the frozen reference engine
+(runtime/_engine_reference.py) doubles as a per-machine speed normalizer,
+so a slower CI runner shifts both numerator and denominator and the
+committed baseline stays valid across machines.  Absolute times are
+recorded in the baseline for context.  Wall time is still noisy at smoke
+scale, so a failing measurement is retried once (minima taken) and cells
+that complete under a 10 ms floor never fail.
+
+    PYTHONPATH=src python -m tools.check_enginetime            # check
+    PYTHONPATH=src python -m tools.check_enginetime --write    # refresh baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).resolve().parent / "enginetime_baseline.json"
+TOLERANCE = 0.25   # fail on >1.25x relative engine-time regression
+NOISE_FLOOR_S = 0.010  # cells still under 10 ms are noise, never a failure
+CELLS = ("churn", "churn_reneg", "mesh_data4")
+
+
+def measure(repeats: int = 1) -> dict:
+    """Per-cell {fast_s, ref_s} minima over ``repeats`` smoke runs."""
+    from benchmarks.bench_engine import run
+
+    out: dict = {"reports_equal": True, "suffix_replay_identical": True, "cells": {}}
+    for _ in range(repeats):
+        result = run(smoke=True)
+        out["reports_equal"] &= result["all_reports_equal"]
+        out["suffix_replay_identical"] &= result["suffix_replay_identical"]
+        for name in CELLS:
+            cell = result[name]
+            cur = {"fast_s": cell["fast_s"], "ref_s": cell["ref_s"]}
+            prev = out["cells"].get(name)
+            if prev is not None:
+                cur = {m: min(prev[m], cur[m]) for m in cur}
+            out["cells"][name] = cur
+    return out
+
+
+def _ratio(cell: dict) -> float:
+    return cell["fast_s"] / cell["ref_s"] if cell["ref_s"] else float("inf")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true", help="refresh the baseline file")
+    args = ap.parse_args(argv)
+
+    current = measure(repeats=2 if args.write else 1)
+    if not current["reports_equal"]:
+        print("FAIL reports_equal: fast engine diverged from the frozen reference", file=sys.stderr)
+        return 1
+    if not current["suffix_replay_identical"]:
+        print("FAIL suffix_replay: snapshot resume diverged from full replay", file=sys.stderr)
+        return 1
+    if args.write:
+        BASELINE.write_text(json.dumps(current, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {BASELINE}")
+        return 0
+
+    baseline = json.loads(BASELINE.read_text())
+    cells = dict(current["cells"])
+    retried = False
+    failures = []
+
+    def regressed(now: dict, base: dict) -> bool:
+        return (
+            _ratio(now) > _ratio(base) * (1 + TOLERANCE)
+            and now["fast_s"] > NOISE_FLOOR_S
+        )
+
+    # A cell measured now but absent from the baseline would silently ship
+    # without regression coverage — force a baseline refresh instead.
+    for name in sorted(set(cells) - set(baseline["cells"])):
+        failures.append(f"{name}: not in baseline — refresh with --write")
+
+    for name, base in sorted(baseline["cells"].items()):
+        now = cells.get(name)
+        if now is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        if regressed(now, base) and not retried:
+            # One retry for the whole run: wall time is noisy, take minima.
+            retried = True
+            again = measure()["cells"]
+            cells = {
+                k: {m: min(v[m], again.get(k, v)[m]) for m in v}
+                for k, v in cells.items()
+            }
+            now = cells[name]
+        msg = (
+            f"{name}: fast/ref {_ratio(now):.3f} vs baseline {_ratio(base):.3f} "
+            f"(fast {now['fast_s']*1e3:.1f}ms, baseline {base['fast_s']*1e3:.1f}ms)"
+        )
+        if regressed(now, base):
+            failures.append(f"{msg} — >{TOLERANCE:.0%} engine-time regression")
+        else:
+            print(f"ok {msg}")
+    if failures:
+        print("\n".join("FAIL " + f for f in failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,13 @@ echo "== solve-time smoke benchmark + regression gate =="
 # fast/reference solve-time ratio vs tools/solvetime_baseline.json.
 python -m tools.check_solvetime || { echo "FAIL solvetime gate"; status=1; }
 
+echo "== engine smoke benchmark + throughput regression gate =="
+# Runs benchmarks.bench_engine in smoke mode (fast engine bit-for-bit equal
+# to runtime/_engine_reference.py on every cell, suffix replay byte-identical)
+# and fails on >1.25x regression of the fast/reference engine-time ratio vs
+# tools/enginetime_baseline.json.  Committed BENCH_engine.json is the full run.
+python -m tools.check_enginetime || { echo "FAIL enginetime gate"; status=1; }
+
 echo "== runtime smoke benchmark: DMA channel scaling + colocation gates =="
 # Exits non-zero unless K=2 channels strictly beat K=1 somewhere (never losing)
 # and colocation lands under the sum of isolated peaks.  Committed
