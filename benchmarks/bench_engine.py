@@ -15,6 +15,10 @@ cell checked for *identical* simulated reports (``simulated_report_dict``):
   * **churn_reneg** — a tighter budget with renegotiation on and
     ``capture_snapshots=True``: every barrier snapshot is resumed and the
     suffix-only replay must reproduce the full-horizon report byte for byte.
+  * **churn_obs** — the observability cell: the obs-off hot path is the
+    quantity ``check_enginetime`` gates (instrumentation must not regress
+    it); the cost of an attached ``ObsRecorder``, report purity obs-on vs
+    obs-off, and the attribution-ledger sum invariant ride along.
   * **mesh_data4** — a data=4 mesh shape (per-device pools, tagged
     collectives, contended ``HostLink``) built directly from Tenants.
 
@@ -209,6 +213,67 @@ def churn_reneg_cell(templates, plans, floors, smoke: bool, seed: int) -> dict:
     }
 
 
+LEDGER_INFORMATIONAL = {"overhead_s", "queue_wait_s", "renegotiation_solve_s"}
+
+
+def ledger_sums(report) -> bool:
+    """Every completed tenant's attribution buckets sum to its overhead_s."""
+    for t in report.tenants:
+        if t.status != "completed" or not t.attribution:
+            continue
+        total = t.attribution["overhead_s"]
+        summed = sum(
+            v for k, v in t.attribution.items() if k not in LEDGER_INFORMATIONAL
+        )
+        if abs(summed - total) > 1e-6 + 1e-9 * abs(total):
+            return False
+    return True
+
+
+def churn_obs_cell(templates, plans, floors, smoke: bool, seed: int) -> dict:
+    """Observability cell: the obs-off hot path is the gated quantity
+    (``check_enginetime`` cell ``churn_obs`` — instrumentation must never
+    regress it), with the obs-on cost, report purity (bit-identical
+    simulated reports with a recorder attached) and the ledger-sum
+    invariant reported alongside."""
+    from repro.obs import ObsRecorder
+
+    n, rate_hz, iters, conc = (60, 20_000.0, (2, 3), 80) if smoke else (
+        300, 50_000.0, (3, 5), 330)
+    items = poisson_workload(
+        list(TEMPLATE_LAYERS), n, rate_hz, seed=seed + 1, iterations=iters
+    )
+    mean_floor = sum(floors.values()) / len(floors)
+    budget = int(mean_floor * conc)
+    mk = lambda mod: churn_tenants(mod, templates, plans, items)
+
+    _, fast_rep, fast_s = timed_run(
+        fast_engine, mk, budget=budget, channels=2, renegotiate=True)
+    recorder = ObsRecorder()
+    _, obs_rep, obs_s = timed_run(
+        fast_engine, mk, budget=budget, channels=2, renegotiate=True,
+        obs=recorder)
+    _, ref_rep, ref_s = timed_run(
+        ref_engine, mk, budget=budget, channels=2, renegotiate=True)
+
+    events = fast_rep.engine["events"]
+    return {
+        "tenants": n,
+        "budget": budget,
+        "events": events,
+        "fast_s": fast_s,                 # obs off: the gated hot path
+        "obs_s": obs_s,                   # ObsRecorder attached
+        "ref_s": ref_s,
+        "obs_cost": obs_s / fast_s if fast_s else 0.0,
+        "speedup": ref_s / fast_s if fast_s else 0.0,
+        "recorded_spans": len(recorder.ops) + len(recorder.transfers)
+        + len(recorder.stalls),
+        "reports_equal": canon(fast_rep) == canon(ref_rep)
+        and canon(obs_rep) == canon(ref_rep),
+        "ledger_sums": ledger_sums(fast_rep) and ledger_sums(obs_rep),
+    }
+
+
 def mesh_cell(templates, plans, smoke: bool) -> dict:
     """data=4 mesh: per-device pools, collectives, contended HostLink."""
     iterations = 3 if smoke else 50
@@ -235,9 +300,11 @@ def run(smoke: bool = False, seed: int = 11) -> dict:
     templates, plans, floors = build_templates()
     churn = churn_cell(templates, plans, floors, smoke, seed)
     reneg = churn_reneg_cell(templates, plans, floors, smoke, seed)
+    obs = churn_obs_cell(templates, plans, floors, smoke, seed)
     mesh = mesh_cell(templates, plans, smoke)
     all_equal = (
-        churn["reports_equal"] and reneg["reports_equal"] and mesh["reports_equal"]
+        churn["reports_equal"] and reneg["reports_equal"]
+        and obs["reports_equal"] and mesh["reports_equal"]
     )
     return {
         "mode": "smoke" if smoke else "full",
@@ -246,9 +313,11 @@ def run(smoke: bool = False, seed: int = 11) -> dict:
         "limit_frac": LIMIT_FRAC,
         "churn": churn,
         "churn_reneg": reneg,
+        "churn_obs": obs,
         "mesh_data4": mesh,
         "all_reports_equal": all_equal,
         "suffix_replay_identical": reneg["suffix_replay_identical"],
+        "ledger_sums": obs["ledger_sums"],
     }
 
 
@@ -264,12 +333,14 @@ def main(argv=None) -> int:
 
     ok_equal = result["all_reports_equal"]
     ok_suffix = result["suffix_replay_identical"]
+    ok_ledger = result["ledger_sums"]
     # Wall time is too noisy to gate at smoke scale (check_enginetime gates
     # the ratio with a noise floor + retry); the full run must hit 10x.
     ok_speedup = args.smoke or result["churn"]["speedup"] >= SPEEDUP_TARGET
     result["acceptance"] = {
         "all_reports_equal": ok_equal,
         "suffix_replay_identical": ok_suffix,
+        "ledger_sums": ok_ledger,
         "churn_speedup_10x": ok_speedup,
     }
     write_bench_json(args.out, result)
@@ -286,12 +357,18 @@ def main(argv=None) -> int:
         f"speedup {r['speedup']:5.2f}x  re-plans {r['renegotiations']}  "
         f"suffix replays {r['snapshots_replayed']} identical={r['suffix_replay_identical']}"
     )
+    o = result["churn_obs"]
+    print(
+        f"  churn+obs  {o['tenants']:5d} tenants  {o['events']:7d} events  "
+        f"obs cost {o['obs_cost']:5.2f}x ({o['recorded_spans']} spans)  "
+        f"equal={o['reports_equal']} ledger_sums={o['ledger_sums']}"
+    )
     print(
         f"  mesh data=4 {m['iterations']:4d} iters  {m['events']:7d} events  "
         f"speedup {m['speedup']:5.2f}x  equal={m['reports_equal']}"
     )
     print(f"wrote {args.out}; acceptance: {result['acceptance']}")
-    return 0 if (ok_equal and ok_suffix and ok_speedup) else 1
+    return 0 if (ok_equal and ok_suffix and ok_ledger and ok_speedup) else 1
 
 
 if __name__ == "__main__":

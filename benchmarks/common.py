@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import functools
 import json
+import os
 import sys
 import time
 
@@ -41,11 +42,37 @@ def cnn_trace(name: str, batch: int = 100, remat: bool = False):
     return tr
 
 
+BENCH_SCHEMA_VERSION = 1
+
+
+def _git_sha() -> str | None:
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+    except OSError:
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
 def write_bench_json(path: str, payload: dict) -> None:
     """Write one benchmark's machine-readable report (`BENCH_*.json`).
 
     One canonical shape (indent=2, sorted keys) shared by every bench_*.py
-    so reports diff cleanly across PRs."""
+    so reports diff cleanly across PRs.  Every report is stamped with a
+    ``_meta`` block — schema version, the git SHA it was produced at, and an
+    ISO timestamp — which is what lets ``tools/bench_history.py`` line the
+    committed reports up into one trajectory."""
+    payload = dict(payload)
+    payload["_meta"] = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "written_at": time.strftime("%Y-%m-%dT%H:%M:%S%z", time.localtime()),
+    }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
 

@@ -90,6 +90,7 @@ def run_mesh(
     contention_aware: bool = True,
     prefetch: str = "backsched",
     record_events: bool = True,
+    obs=None,
 ) -> MeshRunResult:
     """Execute the solved per-device plans mesh-wide.
 
@@ -102,6 +103,9 @@ def run_mesh(
     ``record_events=False`` drops the per-transfer logs for long-horizon
     runs; ``schedules`` is then empty (``schedules_differ`` needs the logs,
     so keep the default when comparing schedule variants).
+
+    ``obs`` attaches a ``repro.obs.ObsRecorder`` for Perfetto trace export
+    (pure observer: the report is bit-identical with or without it).
     """
     link = None
     if contended:
@@ -117,6 +121,7 @@ def run_mesh(
         link=link,
         contention_aware=contention_aware,
         record_events=record_events,
+        obs=obs,
     )
     report = rt.run(mesh_tenants(solved, iterations=iterations))
     schedules = (

@@ -36,6 +36,7 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core.planner import MemoryPlanner
 from repro.core.simulator import TPU_V5E
 from repro.models import build_model
+from repro.obs import add_obs_args, export_trace, recorder_for
 from repro.plan import PlanCache, PlanKey
 from repro.runtime import ColocationResult, colocate_programs
 
@@ -187,6 +188,7 @@ def main(argv=None):
     ap.add_argument("--cache-max-mb", type=float, default=None,
                     help="LRU size bound for --plan-cache")
     ap.add_argument("--json", default=None, help="write the machine-readable report here")
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     cache = None
@@ -222,6 +224,7 @@ def main(argv=None):
         for n, t in arrivals.items():
             print(f"[churn] {n}: arrives at {t*1000:.2f}ms")
 
+    recorder = recorder_for(args)
     result = colocate_programs(
         programs, TPU_V5E,
         budget_frac=args.budget_frac,
@@ -234,8 +237,11 @@ def main(argv=None):
         arrivals=arrivals,
         priorities=priorities,
         renegotiate=args.renegotiate,
+        record_events=args.record_events,
+        obs=recorder,
     )
     print_colocation(result)
+    export_trace(args, recorder, result.report)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result.as_dict(), f, indent=2, sort_keys=True)

@@ -116,6 +116,9 @@ def main(argv=None):
                     help="shared budget as a fraction of summed step peaks")
     ap.add_argument("--channels", type=int, default=2,
                     help="DMA channels for the --colocate runtime")
+    from repro.obs import add_obs_args
+
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -136,20 +139,25 @@ def main(argv=None):
             # solved programs the planner just produced/restored.
             from repro.core.simulator import TPU_V5E
             from repro.launch.colocate import print_colocation
+            from repro.obs import export_trace, recorder_for
             from repro.runtime import colocate_programs
 
             programs = {
                 f"{args.arch}:{role}": planner.program
                 for role, (planner, _rep) in planned.items()
             }
+            recorder = recorder_for(args)
             result = colocate_programs(
                 programs, TPU_V5E,
                 budget_frac=args.colocate_budget_frac,
                 channels=args.channels,
                 size_threshold=1 << 18,
                 cache=plan_cache,
+                record_events=args.record_events,
+                obs=recorder,
             )
             print_colocation(result)
+            export_trace(args, recorder, result.report)
     key = jax.random.PRNGKey(args.seed + 1)
     spec = serve_batch_struct(cfg, B, P)
     batch = {"tokens": jax.random.randint(key, spec["tokens"].shape, 0, cfg.vocab_size, jnp.int32)}

@@ -40,6 +40,7 @@ from repro.dist import (
 )
 from repro.launch.steps import batch_specs, param_specs
 from repro.models import build_model
+from repro.obs import add_obs_args, export_trace, recorder_for
 from repro.plan import PlanCache, PlanKey
 
 
@@ -116,6 +117,7 @@ def main(argv=None) -> int:
     ap.add_argument("--size-threshold", type=int, default=1 << 18)
     ap.add_argument("--plan-cache", default=None)
     ap.add_argument("--json", default=None)
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     hw = TPU_V5E
@@ -158,12 +160,18 @@ def main(argv=None) -> int:
         budget_per_device=budget, channels=args.channels,
         iterations=args.iterations,
         link_bw=hw.link_bw * args.link_bw_frac, link_lanes=args.link_lanes,
+        record_events=args.record_events,
     )
     uncontended = run_mesh(solved, hw, contended=False,
                            budget_per_device=budget, channels=args.channels,
-                           iterations=args.iterations)
-    contended = run_mesh(solved, hw, contended=True, contention_aware=True, **kw)
+                           iterations=args.iterations,
+                           record_events=args.record_events)
+    # The trace observes the headline cell: contended + contention-aware.
+    recorder = recorder_for(args)
+    contended = run_mesh(solved, hw, contended=True, contention_aware=True,
+                         obs=recorder, **kw)
     blind = run_mesh(solved, hw, contended=True, contention_aware=False, **kw)
+    export_trace(args, recorder, contended.report)
     print(
         f"[dist] mean overhead: uncontended {uncontended.mean_overhead()*100:.2f}% | "
         f"shared link {contended.mean_overhead()*100:.2f}% "

@@ -86,6 +86,9 @@ def main(argv=None):
     ap.add_argument("--hbm-limit-gb", type=float, default=None,
                     help="AutoSwap offload budget per device (GB)")
     ap.add_argument("--log-every", type=int, default=10)
+    from repro.obs import add_obs_args
+
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -121,6 +124,35 @@ def main(argv=None):
                 f"{len(capture.groups[g].collectives)} collectives, "
                 f"solved in {solved.solve_ms[g]:.1f} ms{src}"
             )
+        if args.trace_out:
+            # Observability run: execute the solved mesh plans through the
+            # runtime (contended shared link, the headline configuration)
+            # and export the Perfetto trace before training proper starts.
+            from repro.dist import run_mesh
+            from repro.obs import export_trace, recorder_for
+
+            shard_peak = max(
+                p.require_trace().peak_load() for p in solved.programs.values()
+            )
+            # Default to the full shard peak: smoke traces are too small to
+            # swap-plan below their peak, and an unschedulable tenant yields
+            # an empty (vacuous) trace.
+            budget = (
+                int(args.hbm_limit_gb * 2**30)
+                if args.hbm_limit_gb is not None
+                else int(shard_peak)
+            )
+            recorder = recorder_for(args)
+            mesh_run = run_mesh(
+                solved, TPU_V5E, budget_per_device=budget, iterations=2,
+                record_events=args.record_events, obs=recorder,
+            )
+            print(
+                f"[dist-plan] mesh run: makespan "
+                f"{mesh_run.report.makespan_s*1e3:.2f}ms, mean overhead "
+                f"{mesh_run.mean_overhead()*100:.2f}%"
+            )
+            export_trace(args, recorder, mesh_run.report)
 
     remat_policy = None
     if args.plan or args.plan_cache or args.hbm_limit_gb is not None:

@@ -1,0 +1,44 @@
+"""repro.obs: runtime observability for the memory engine.
+
+Three pieces, all pure observers of ``runtime.MemoryRuntime``:
+
+  metrics      — ``MetricsRegistry``: named counters/gauges with a JSONL
+                 sink, cheap enough to leave attached on long horizons.
+  recorder     — ``ObsRecorder``: the hook sink the engine calls when an
+                 ``obs=`` recorder is attached (op spans, swap transfers,
+                 stalls by cause, link blackouts, admissions,
+                 renegotiations, HBM occupancy samples).  Detached
+                 (``obs=None``, the default) the engine hot path pays one
+                 predicate per event site — gated exactly like
+                 ``record_events``.
+  trace_export — ``chrome_trace``/``write_trace``: render a recorder into a
+                 Chrome-trace-event JSON object that loads directly in
+                 Perfetto (https://ui.perfetto.dev) with per-tenant op
+                 slices, per-DMA-channel swap slices, host-link lane and
+                 blackout tracks, renegotiation flow events and HBM
+                 occupancy counter tracks.
+
+The stall-attribution ledger itself (overhead seconds decomposed into named
+causes, summing to each tenant's total overhead) is *always on* — it rides
+in ``TenantReport.attribution``/``RuntimeReport.attribution`` whether or not
+a recorder is attached; ``simulated_report_dict`` strips it alongside the
+other non-reference fields.
+"""
+
+from .cli import add_obs_args, export_trace, recorder_for
+from .metrics import Counter, Gauge, MetricsRegistry
+from .recorder import ObsRecorder
+from .trace_export import TRACE_SCHEMA_VERSION, chrome_trace, write_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "MetricsRegistry",
+    "ObsRecorder",
+    "TRACE_SCHEMA_VERSION",
+    "add_obs_args",
+    "chrome_trace",
+    "export_trace",
+    "recorder_for",
+    "write_trace",
+]

@@ -1,0 +1,53 @@
+"""Uniform observability flags for the launch CLIs.
+
+Every launcher that executes the runtime takes the same pair:
+
+  --record-events / --no-record-events   the engine's per-transfer event
+                                         logs (on by default; turn off for
+                                         fleet-scale horizons)
+  --trace-out PATH                       attach an ObsRecorder and write a
+                                         Perfetto-loadable trace JSON here
+
+``add_obs_args`` installs them, ``recorder_for`` builds the recorder (or
+None) from the parsed args, and ``export_trace`` writes + announces the
+file.  Keeping this in one place is what makes the flags *uniform* —
+colocate, serve, shardplan and train all call these three helpers.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def add_obs_args(ap: argparse.ArgumentParser, default_record: bool = True) -> None:
+    ap.add_argument(
+        "--record-events", action=argparse.BooleanOptionalAction,
+        default=default_record,
+        help="runtime per-transfer event logs (disable for long horizons)",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write a Perfetto-loadable .trace.json of the runtime here",
+    )
+
+
+def recorder_for(args):
+    """An ObsRecorder when ``--trace-out`` was given, else None."""
+    if getattr(args, "trace_out", None):
+        from .recorder import ObsRecorder
+
+        return ObsRecorder()
+    return None
+
+
+def export_trace(args, recorder, report) -> None:
+    """Write the recorder to ``args.trace_out`` with ``report`` embedded."""
+    if recorder is None or not getattr(args, "trace_out", None):
+        return
+    from .trace_export import write_trace
+
+    trace = write_trace(args.trace_out, recorder, report)
+    print(
+        f"[obs] wrote {args.trace_out} ({len(trace['traceEvents'])} events; "
+        f"open at https://ui.perfetto.dev)"
+    )

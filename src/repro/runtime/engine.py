@@ -405,10 +405,30 @@ class _TenantRun:
         self.reneg_freed_bytes = 0
         self.reneg_solve_ms = 0.0
         self._record = engine.record_events
+        self._obs = engine.obs
         # Engine knobs are fixed for the life of a run: cache the attribute
         # chains the per-step hot loop would otherwise chase every event.
         self._budget_guard = engine.budget is not None
         self._backsched = engine.prefetch == "backsched"
+        # Stall-attribution ledger (always on; the hooks above are the
+        # optional part).  Each accumulator is a named cause of overhead
+        # seconds; ``MemoryRuntime._finish`` closes them into
+        # ``TenantReport.attribution`` with an exact-sum residual.
+        self.attr_xfer_s = 0.0        # swap-in stall: transfer was moving bytes
+        self.attr_chan_s = 0.0        # swap-in stall: queued for channel/lane
+        self.attr_black_s = 0.0       # swap-in stall: shifted past blackouts
+        self.attr_outpend_s = 0.0     # swap-in stall: own swap-out not done
+        self.stall_alloc_s = 0.0      # malloc delayed on pending swap-outs
+        self.stall_drain_s = 0.0      # iteration-barrier transfer drains
+        self.coll_s = 0.0             # collective seconds charged to the clock
+        # Collective seconds the baseline already carries per iteration
+        # (assign_times folds op_extra_s into op_times): the ledger only
+        # attributes the excess the engine charges beyond that.
+        self._extra_iter_s = float(sum((trace.op_extra_s or {}).values()))
+        # Per-variable swap-in timing detail for the stall decomposition:
+        # var -> (transfer seconds, queue wait, blackout shift), written by
+        # ``acquire_transfer`` for this iteration's "in" transfers.
+        self._in_detail: dict[int, tuple[float, float, float]] = {}
 
         n = trace.num_indices
         self.delta = [0] * (n + 1)
@@ -584,6 +604,7 @@ class _TenantRun:
     def _begin_iteration(self) -> None:
         self.in_done = {}
         self.out_done = {}
+        self._in_detail = {}
         # Wrap decisions: in steady state the variable is already on the host
         # when the iteration starts (swapped out during the previous tail).
         for d in self.decisions:
@@ -609,11 +630,21 @@ class _TenantRun:
             if rec.retired:
                 continue
             if done_t > self.t:
+                self.stall_drain_s += done_t - self.t
+                if self._obs is not None:
+                    self._obs.stall(self, "barrier_drain", self.t,
+                                    done_t - self.t, rec.var)
                 self.t = done_t
             self.pending.retire(rec)
             acct.add(self.name, -rec.size)
         if self.in_done:
-            self.t = max(self.t, max(self.in_done.values()))
+            in_max = max(self.in_done.values())
+            if in_max > self.t:
+                self.stall_drain_s += in_max - self.t
+                if self._obs is not None:
+                    self._obs.stall(self, "barrier_drain", self.t,
+                                    in_max - self.t, -1)
+                self.t = in_max
         acct.add(self.name, -acct.resident.get(self.name, 0))
         # The barrier is the only point where the resident set is empty, so a
         # staged renegotiation (shrunken swap plan) swaps in here.
@@ -640,13 +671,33 @@ class _TenantRun:
                 # Should have been prefetched; schedule now (late prefetch).
                 # Still charged at schedule time so concurrent channels see it.
                 ready = max(self.t, self.out_done.get(d.var, 0.0))
-                start, end, ch = self.engine.acquire_transfer(self, "in", ready, d.size)
+                start, end, ch = self.engine.acquire_transfer(
+                    self, "in", ready, d.size, d.var)
                 self.in_done[d.var] = end
                 acct.add(self.name, d.size)
                 if record:
                     self.in_events.append((d.var, start, end, ch))
             if self.in_done[d.var] > self.t:
                 self.stalls += 1
+                # Attribute the wait backwards from its components: bytes in
+                # flight first, then blackout shift, then channel/lane queue;
+                # whatever the transfer timing can't explain is time spent
+                # waiting on the variable's own swap-out (the transfer could
+                # not even be scheduled until the bytes were host-side).
+                wait = self.in_done[d.var] - self.t
+                xfer_s, chan_w, black_s = self._in_detail.get(
+                    d.var, (0.0, 0.0, 0.0))
+                part = min(wait, xfer_s)
+                self.attr_xfer_s += part
+                rem = wait - part
+                part = min(rem, black_s)
+                self.attr_black_s += part
+                rem -= part
+                part = min(rem, chan_w)
+                self.attr_chan_s += part
+                self.attr_outpend_s += rem - part
+                if self._obs is not None:
+                    self._obs.stall(self, "swap_in_wait", self.t, wait, d.var)
                 self.t = self.in_done[d.var]
 
         # 2. Budget enforcement on mallocs (paper: delay the Malloc).  Any
@@ -657,12 +708,17 @@ class _TenantRun:
                 rec = self.pending.pop_min()
                 if rec.done_t > self.t:
                     self.delayed += 1
+                    self.stall_alloc_s += rec.done_t - self.t
+                    if self._obs is not None:
+                        self._obs.stall(self, "swap_out_drain", self.t,
+                                        rec.done_t - self.t, rec.var)
                     self.t = rec.done_t
                 acct.add(rec.owner.name, -rec.size)
         acct.add(self.name, self.delta[i])
         acct.mark_peak(self.name)
 
         # 3. Execute the op (compute is per-tenant; only memory is shared).
+        t_op0 = self.t
         self.t += self._op_durs[i]
         # 3b. Collective tagged at this op: it occupies the interconnect for
         # its duration (the tenant's clock advances through it, matching the
@@ -677,11 +733,17 @@ class _TenantRun:
                 frontier = min(r.t for r in self.engine._running) if self.engine._running else self.t
                 self.engine.link.add_blackout(self.t, self.t + cdur,
                                               prune_before=frontier)
+                if self._obs is not None:
+                    self._obs.blackout(self.t, self.t + cdur)
+            if self._obs is not None:
+                self._obs.collective(self, i, self.t, cdur)
+            self.coll_s += cdur
             self.t += cdur
 
         # 4. Launch swap-outs whose trigger access just completed.
         for d in self.out_at.get(i, ()):
-            start, end, ch = self.engine.acquire_transfer(self, "out", self.t, d.size)
+            start, end, ch = self.engine.acquire_transfer(
+                self, "out", self.t, d.size, d.var)
             self.out_done[d.var] = end
             rec = _PendingOut(end, self, d.var, d.size, self.engine._next_seq())
             self.pending.push(rec)
@@ -759,7 +821,7 @@ class _TenantRun:
                         active[w] = ent; w += 1; r += 1   # not due yet: keep
                         continue
                 start, end, ch = self.engine.acquire_transfer(
-                    self, "in", max(self.t, out_done[var]), size
+                    self, "in", max(self.t, out_done[var]), size, var
                 )
                 in_done[var] = end
                 acct.add(self.name, size)
@@ -772,6 +834,11 @@ class _TenantRun:
                     active[w] = active[r]; w += 1; r += 1
                 del active[w:]
 
+        if self._obs is not None:
+            # The compute span alone; swap-outs/prefetches launched this
+            # step have already settled, so the occupancy sample is the
+            # end-of-step state.
+            self._obs.op_step(self, i, t_op0, t_op0 + self._op_durs[i], acct)
         self.i += 1
         if self.i >= self.trace.num_indices:
             self.finished = self._end_iteration()
@@ -847,6 +914,13 @@ class TenantReport:
     device: str | None = None
     # Engine throughput: simulated op-steps this tenant executed.
     events: int = 0
+    # Stall-attribution ledger: overhead seconds (duration - baseline)
+    # decomposed into named causes.  Every key except ``overhead_s``,
+    # ``queue_wait_s`` and ``renegotiation_solve_s`` is a bucket; the
+    # buckets (including the float-closure ``residual_s``) sum to
+    # ``overhead_s``.  None for unschedulable tenants; stripped by
+    # ``simulated_report_dict`` (absent from the frozen reference engine).
+    attribution: dict | None = None
 
     def as_dict(self) -> dict:
         return self.__dict__.copy()
@@ -875,6 +949,9 @@ class RuntimeReport:
     # renegotiation-solve seconds, events/sec).  Wall clock varies run to
     # run; ``simulated_report_dict`` strips this for equivalence checks.
     engine: dict | None = None
+    # Sum of the per-tenant attribution ledgers (completed tenants only);
+    # stripped by ``simulated_report_dict`` like the per-tenant ledgers.
+    attribution: dict | None = None
 
     def tenant(self, name: str) -> TenantReport:
         for t in self.tenants:
@@ -903,23 +980,29 @@ class RuntimeReport:
             d["link"] = dict(self.link)
         if self.engine is not None:
             d["engine"] = dict(self.engine)
+        if self.attribution is not None:
+            d["attribution"] = dict(self.attribution)
         return d
 
 
 def simulated_report_dict(report: "RuntimeReport") -> dict:
     """``report.as_dict()`` reduced to the *simulated* quantities.
 
-    Drops the wall-clock engine counters (different every run) and the
-    per-tenant event counts (absent from the frozen reference engine's
-    reports), leaving exactly the fields two engines must agree on
-    bit-for-bit.  Works on fast and reference reports alike.
+    Drops the wall-clock engine counters (different every run), the
+    per-tenant event counts and the attribution ledgers (absent from the
+    frozen reference engine's reports; the ledgers also carry the
+    wall-clock ``renegotiation_solve_s``), leaving exactly the fields two
+    engines must agree on bit-for-bit.  Works on fast and reference
+    reports alike.
     """
     d = report.as_dict()
     d.pop("engine", None)
+    d.pop("attribution", None)
     d["renegotiation_solve_ms"] = 0.0
     d["tenants"] = [dict(t) for t in d["tenants"]]
     for t in d["tenants"]:
         t.pop("events", None)
+        t.pop("attribution", None)
         t["renegotiation_solve_ms"] = 0.0
     return d
 
@@ -960,6 +1043,7 @@ class MemoryRuntime:
         contention_aware: bool = True,
         record_events: bool = True,
         capture_snapshots: bool = False,
+        obs=None,
     ):
         if prefetch not in ("backsched", "eager"):
             raise ValueError(f"unknown prefetch policy {prefetch!r}")
@@ -982,6 +1066,13 @@ class MemoryRuntime:
         self.contention_aware = contention_aware
         self.record_events = record_events
         self.capture_snapshots = capture_snapshots
+        # Optional observer (``repro.obs.ObsRecorder`` or anything with its
+        # hook surface).  The engine only *calls* it — never reads from it —
+        # so simulated reports are bit-identical obs-on vs obs-off; with
+        # ``obs=None`` (default) each hook site costs one predicate, gated
+        # exactly like ``record_events``.  Duck-typed on purpose: the engine
+        # stays import-free of ``repro.obs``.
+        self.obs = obs
         # Default (None) device pool, plus one pool per named Tenant.device.
         # The attribute names acct/channels/pending_outs keep the legacy
         # single-device surface tests and callers rely on.
@@ -1050,25 +1141,40 @@ class MemoryRuntime:
         return size / min(self.hw.link_bw, self.link.lane_bw)
 
     def acquire_transfer(
-        self, run: "_TenantRun", direction: str, ready_t: float, size: int
+        self, run: "_TenantRun", direction: str, ready_t: float, size: int,
+        var: int = -1,
     ) -> tuple[float, float, int]:
         """Schedule one swap transfer for ``run``: it must hold the device's
         directional DMA channel and (when a HostLink is configured) a global
-        link lane, and is shifted past any collective blackout."""
+        link lane, and is shifted past any collective blackout.  ``var`` is
+        the swapped variable, carried for the stall-attribution detail and
+        the obs transfer hook (``-1``: unattributed legacy callers)."""
         chans = run.chans
         if self.link is None:
-            return chans.acquire(direction, ready_t, size / self.hw.link_bw)
+            duration = size / self.hw.link_bw
+            start, end, ch = chans.acquire(direction, ready_t, duration)
+            if direction == "in":
+                run._in_detail[var] = (duration, start - ready_t, 0.0)
+            if self.obs is not None:
+                self.obs.transfer(run, direction, var, start, end, ch,
+                                  None, ready_t, size)
+            return start, end, ch
         ids = chans.out_ids if direction == "out" else chans.in_ids
         ch = min(ids, key=lambda c: chans.free_at[c])
         lane = min(range(self.link.lanes), key=lambda l: self.link.free_at[l])
         duration = self.xfer_seconds(size)
-        start = max(ready_t, chans.free_at[ch], self.link.free_at[lane])
-        start = self.link.next_clear(start, duration)
+        queued = max(ready_t, chans.free_at[ch], self.link.free_at[lane])
+        start = self.link.next_clear(queued, duration)
         end = start + duration
         chans.free_at[ch] = end
         self.link.free_at[lane] = end
         self.link.bytes_moved += size
         self.link.transfers += 1
+        if direction == "in":
+            run._in_detail[var] = (duration, queued - ready_t, start - queued)
+        if self.obs is not None:
+            self.obs.transfer(run, direction, var, start, end, ch,
+                              lane, ready_t, size)
         return start, end, ch
 
     # -------------------------------------------------------- admission path
@@ -1081,6 +1187,8 @@ class MemoryRuntime:
             priority=cand.priority, iterations=cand.iterations,
             device=cand.device,
         )
+        if self.obs is not None:
+            self.obs.unschedulable(cand.name, cand.arrival_t)
 
     def _try_admit(self, clock: float) -> None:
         """Admit waiting tenants FIFO while their floors fit the budget of
@@ -1107,6 +1215,9 @@ class MemoryRuntime:
             run._admit_seq = self._admit_seq
             self._admit_seq += 1
             heapq.heappush(self._event_heap, (run.t, run._admit_seq, run))
+            if self.obs is not None:
+                self.obs.admitted(cand.name, cand.device,
+                                  cand.arrival_t, run.admit_t)
 
     def _drain_arrivals(self, upto: float) -> None:
         """Move arrivals with ``arrival_t <= upto`` into the admission queue,
@@ -1169,6 +1280,8 @@ class MemoryRuntime:
             self._promised[v.device] = (
                 self._promised.get(v.device, 0) + v.floor - new_floor
             )
+            if self.obs is not None:
+                self.obs.renegotiation("staged", v.name, v.t, new_limit)
             return
 
     def _on_barrier(self, run: _TenantRun) -> None:
@@ -1188,6 +1301,8 @@ class MemoryRuntime:
             # Nobody waits anymore (a finish admitted them): keep the
             # better plan, don't shrink for no one.
             self._reneg_cancelled += 1
+            if self.obs is not None:
+                self.obs.renegotiation("cancelled", run.name, run.t, 0)
             return
         run._install_decisions(decisions)
         run.floor = new_floor
@@ -1198,6 +1313,8 @@ class MemoryRuntime:
         self._reneg_applied += 1
         self._reneg_freed += freed
         self._reneg_solve_ms += solve_ms
+        if self.obs is not None:
+            self.obs.renegotiation("applied", run.name, run.t, freed)
         self._try_admit(run.t)
         self._maybe_renegotiate()
         if self.capture_snapshots:
@@ -1217,10 +1334,36 @@ class MemoryRuntime:
             )
             run.replan_pending = None
             self._reneg_cancelled += 1
+            if self.obs is not None:
+                self.obs.renegotiation("cancelled", run.name, run.t, 0)
         run.release_residency()
         self._now = max(self._now, run.t)
         dur = run.t - run.admit_t
         base = run.baseline_s * run.completed_iterations()
+        # Close the stall-attribution ledger: the named buckets plus a
+        # float-closure residual sum to the tenant's overhead seconds.
+        # ``collective_excess_s`` is only what the engine charged beyond the
+        # collective time assign_times already folded into the baseline.
+        overhead_s = max(0.0, dur - base)
+        coll_excess = run.coll_s - run._extra_iter_s * run.completed_iterations()
+        named = (run.attr_xfer_s + run.attr_black_s + run.attr_chan_s
+                 + run.attr_outpend_s + run.stall_alloc_s + run.stall_drain_s
+                 + coll_excess)
+        attribution = {
+            "overhead_s": overhead_s,
+            "swap_in_transfer_s": run.attr_xfer_s,
+            "link_blackout_s": run.attr_black_s,
+            "channel_contention_s": run.attr_chan_s,
+            "swap_out_pending_s": run.attr_outpend_s,
+            "swap_out_drain_s": run.stall_alloc_s,
+            "barrier_drain_s": run.stall_drain_s,
+            "collective_excess_s": coll_excess,
+            "residual_s": overhead_s - named,
+            # Informational (outside the overhead sum): admission queueing
+            # precedes ``admitted_at`` and the re-solve is host wall-clock.
+            "queue_wait_s": run.admit_t - run.arrival_t,
+            "renegotiation_solve_s": run.reneg_solve_ms / 1e3,
+        }
         self._reports[run.name] = TenantReport(
             name=run.name, status="completed", baseline_s=base,
             duration_s=dur,
@@ -1236,7 +1379,10 @@ class MemoryRuntime:
             renegotiation_solve_ms=run.reneg_solve_ms,
             device=run.device,
             events=run.events,
+            attribution=attribution,
         )
+        if self.obs is not None:
+            self.obs.finished(run.name, run.device, run.t)
         self._try_admit(run.t)
         self._maybe_renegotiate()
 
@@ -1252,6 +1398,12 @@ class MemoryRuntime:
         memo: dict[int, object] = {id(self.hw): self.hw}
         if self.replanner is not None:
             memo[id(self.replanner)] = self.replanner
+        if self.obs is not None:
+            # Shared, not copied: ``resume()`` on a snapshot appends its
+            # suffix events to the same recorder (so replayed spans appear
+            # twice if the original run also completed — detach obs before
+            # resuming when that matters).
+            memo[id(self.obs)] = self.obs
         traces = [t.trace for t in self._arrivals]
         traces += [t.trace for t in self._waiting]
         traces += [r.trace for r in self._running]
@@ -1308,6 +1460,11 @@ class MemoryRuntime:
     def _final_report(self, order: list[str], wall_s: float) -> RuntimeReport:
         ordered = [self._reports[n] for n in order if n in self._reports]
         named_devices = sorted(d for d in self._accts if d is not None)
+        attr_totals: dict[str, float] = {}
+        for t in ordered:
+            if t.attribution:
+                for k, v in t.attribution.items():
+                    attr_totals[k] = attr_totals.get(k, 0.0) + v
         return RuntimeReport(
             hardware=self.hw.name,
             budget=self.budget,
@@ -1346,6 +1503,7 @@ class MemoryRuntime:
                 "events_per_s": self._events / wall_s if wall_s > 0 else 0.0,
                 "solve_wall_s": self._reneg_solve_ms / 1e3,
             },
+            attribution=attr_totals,
         )
 
     def run(self, tenants: Sequence[Tenant]) -> RuntimeReport:

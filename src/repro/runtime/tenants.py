@@ -190,6 +190,7 @@ def colocate_programs(
     departures: "dict[str, float] | None" = None,
     renegotiate: bool = False,
     record_events: bool = True,
+    obs=None,
 ) -> ColocationResult:
     """Co-schedule N solved programs under one shared HBM budget.
 
@@ -205,6 +206,8 @@ def colocate_programs(
 
     ``record_events=False`` disables the runtime's per-transfer event logs
     for fleet-scale horizons (the report's simulated figures are unchanged).
+    ``obs`` attaches a ``repro.obs.ObsRecorder`` to the shared runtime (the
+    isolated baselines are never observed): pure observer, identical report.
     """
     arrivals = arrivals or {}
     priorities = priorities or {}
@@ -239,6 +242,7 @@ def colocate_programs(
             programs=named_programs,
         ),
         record_events=record_events,
+        obs=obs,
     )
     report = rt.run(tenants)
     return ColocationResult(

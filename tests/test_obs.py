@@ -1,0 +1,308 @@
+"""repro.obs: pure-observer tracing, stall attribution, metrics (Issue 7).
+
+Three invariants pinned here:
+
+  1. Observation is free of side effects — attaching an ``ObsRecorder``
+     (or toggling ``record_events``/``capture_snapshots``) must leave the
+     canonical simulated report byte-identical.
+  2. The stall-attribution ledger decomposes exactly: per tenant and for
+     the report-level rollup, the named cause buckets sum to ``overhead_s``
+     (``residual_s`` closes the float sum; informational keys excluded).
+  3. Exported traces satisfy ``tools/check_trace.py``: well-formed Chrome
+     trace events, non-overlapping slices per track, paired flow arrows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.planner import AutoSwapPlanner
+from repro.core.simulator import GTX_1080TI
+from repro.obs import (
+    MetricsRegistry,
+    ObsRecorder,
+    TRACE_SCHEMA_VERSION,
+    add_obs_args,
+    chrome_trace,
+    export_trace,
+    recorder_for,
+    write_trace,
+)
+from repro.runtime import engine as fast
+from repro.runtime.engine import planned_peak, simulated_report_dict
+from repro.runtime.workload import poisson_workload, synthetic_train_trace
+
+HW = GTX_1080TI
+SIZE_THRESHOLD = 1 << 20
+LEDGER_INFORMATIONAL = {"overhead_s", "queue_wait_s", "renegotiation_solve_s"}
+
+
+def solve(trace, frac=0.7, scorer="swdoa"):
+    pl = AutoSwapPlanner(trace, HW, size_threshold=SIZE_THRESHOLD)
+    limit = int(pl.peak_load * frac)
+    return limit, pl.select(limit, scorer)
+
+
+TEMPLATES = {
+    "small": synthetic_train_trace(4),
+    "medium": synthetic_train_trace(6),
+    "base": synthetic_train_trace(10),
+}
+PLANS = {name: solve(tr) for name, tr in TEMPLATES.items()}
+FLOORS = {n: planned_peak(TEMPLATES[n], PLANS[n][1]) for n in TEMPLATES}
+BUDGET = FLOORS["base"] + (FLOORS["small"] + FLOORS["medium"]) // 2
+
+
+def canon(report) -> str:
+    return json.dumps(simulated_report_dict(report), sort_keys=True)
+
+
+def churn_tenants(mod, items, base_iters=6):
+    ts = [
+        mod.Tenant(
+            "base", TEMPLATES["base"], list(PLANS["base"][1]),
+            limit=PLANS["base"][0], iterations=base_iters, priority=0.5,
+        )
+    ]
+    for it in items:
+        limit, decisions = PLANS[it.template]
+        ts.append(
+            mod.Tenant(
+                it.name, TEMPLATES[it.template], list(decisions), limit=limit,
+                iterations=it.iterations, arrival_t=it.arrival_t,
+                priority=it.priority,
+            )
+        )
+    return ts
+
+
+def mesh_tenants(mod, devices=4):
+    ts = []
+    for i in range(devices):
+        name = "small" if i % 2 else "medium"
+        trace = TEMPLATES[name]
+        limit, decisions = PLANS[name]
+        colls = {2: 0.004, trace.num_indices - 2: 0.006}
+        ts.append(
+            mod.Tenant(
+                f"shard{i}", trace, list(decisions), limit=limit,
+                iterations=3, device=f"d{i}", collectives=colls,
+                collective_owner=(i == 0),
+            )
+        )
+    return ts
+
+
+def churn_run(obs=None, **kw):
+    items = poisson_workload(["small", "medium"], 6, 50.0, seed=11, iterations=(1, 3))
+    rt = fast.MemoryRuntime(
+        HW, budget=kw.pop("budget", BUDGET), channels=2,
+        renegotiate=kw.pop("renegotiate", True),
+        replan_size_threshold=SIZE_THRESHOLD, obs=obs, **kw,
+    )
+    return rt.run(churn_tenants(fast, items))
+
+
+def mesh_run(obs=None):
+    rt = fast.MemoryRuntime(
+        HW, channels=2, link=fast.HostLink.make(HW.link_bw, 2), obs=obs,
+    )
+    return rt.run(mesh_tenants(fast, 4))
+
+
+def _load_check_trace():
+    path = Path(__file__).resolve().parents[1] / "tools" / "check_trace.py"
+    spec = importlib.util.spec_from_file_location("check_trace", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------- purity
+def test_obs_is_a_pure_observer_churn():
+    rec = ObsRecorder()
+    assert canon(churn_run(obs=rec)) == canon(churn_run(obs=None))
+    assert rec.ops and rec.transfers and rec.admissions
+    assert any(k == "staged" for k, *_ in rec.renegotiations)
+
+
+def test_obs_is_a_pure_observer_mesh():
+    rec = ObsRecorder()
+    assert canon(mesh_run(obs=rec)) == canon(mesh_run(obs=None))
+    assert rec.blackouts and rec.collectives
+    assert {r[1] for r in rec.ops} == {f"d{i}" for i in range(4)}
+
+
+def test_op_slices_off_still_records_stalls_and_transfers():
+    rec = ObsRecorder(op_slices=False)
+    churn_run(obs=rec)
+    assert not rec.ops
+    assert rec.transfers and rec.admissions
+    assert rec.metrics.snapshot()["engine.ops"] > 0
+
+
+# ------------------------------------------------------------ attribution
+def ledger_closes(ledger: dict) -> bool:
+    total = ledger["overhead_s"]
+    named = sum(v for k, v in ledger.items() if k not in LEDGER_INFORMATIONAL)
+    return abs(named - total) <= 1e-6 + 1e-9 * abs(total)
+
+
+def test_ledger_sums_exactly_per_tenant_and_total():
+    report = churn_run()
+    assert report.attribution is not None and ledger_closes(report.attribution)
+    checked = 0
+    for t in report.tenants:
+        if t.attribution is None:
+            continue
+        assert ledger_closes(t.attribution), t.name
+        assert t.attribution["overhead_s"] >= 0.0
+        assert t.attribution["queue_wait_s"] == t.queue_wait_s
+        checked += 1
+    assert checked == len(report.tenants)
+    # A budgeted churn run is not overhead-free: some named cause is hot.
+    named = {
+        k: v for k, v in report.attribution.items()
+        if k not in LEDGER_INFORMATIONAL and k != "residual_s"
+    }
+    assert any(v > 0 for v in named.values()), named
+
+
+def test_ledger_mesh_contention_shows_link_causes():
+    report = mesh_run()
+    assert report.attribution is not None and ledger_closes(report.attribution)
+    # Tagged collectives on a shared link: the excess is attributed, and the
+    # blackout windows the non-owner shards stall behind land in the ledger.
+    assert report.attribution["collective_excess_s"] >= 0.0
+    for t in report.tenants:
+        assert t.attribution is not None and ledger_closes(t.attribution)
+
+
+def test_attribution_stripped_from_simulated_report():
+    report = churn_run()
+    d = simulated_report_dict(report)
+    assert "attribution" not in d
+    assert all("attribution" not in t for t in d["tenants"])
+    assert report.as_dict()["attribution"] == report.attribution
+
+
+# ------------------------------------------------------------ trace export
+def test_trace_export_passes_checker(tmp_path):
+    checker = _load_check_trace()
+    rec = ObsRecorder()
+    report = churn_run(obs=rec)
+    path = tmp_path / "churn.trace.json"
+    trace = write_trace(str(path), rec, report)
+    assert checker.check_trace(str(path)) == []
+    assert trace["otherData"]["schema_version"] == TRACE_SCHEMA_VERSION
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert {"process_name", "thread_name", "renegotiation staged"} <= names
+    # Counter tracks for memory occupancy made it in.
+    assert any(e["ph"] == "C" and e["name"].startswith("HBM")
+               for e in trace["traceEvents"])
+
+
+def test_trace_export_mesh_passes_checker(tmp_path):
+    checker = _load_check_trace()
+    rec = ObsRecorder()
+    report = mesh_run(obs=rec)
+    path = tmp_path / "mesh.trace.json"
+    trace = write_trace(str(path), rec, report)
+    assert checker.check_trace(str(path)) == []
+    # Per-device DMA rows and the link blackout track are present.
+    pids = {e["pid"] for e in trace["traceEvents"]}
+    assert {1, 2, 3, 4} <= pids
+    assert any(e.get("name") == "blackout"
+               for e in trace["traceEvents"] if e["ph"] == "X")
+
+
+def test_committed_example_traces_validate():
+    checker = _load_check_trace()
+    traces = sorted(
+        (Path(__file__).resolve().parents[1] / "examples" / "traces").glob("*.trace.json")
+    )
+    assert len(traces) >= 2
+    for p in traces:
+        assert checker.check_trace(str(p)) == [], p.name
+
+
+def test_chrome_trace_events_sorted_by_ts():
+    rec = ObsRecorder()
+    churn_run(obs=rec)
+    trace = chrome_trace(rec)
+    stamped = [e["ts"] for e in trace["traceEvents"] if e["ph"] != "M"]
+    assert stamped == sorted(stamped)
+
+
+# ------------------------------------------------- simulated_report_dict (S3)
+def test_simulated_report_stable_across_observability_toggles():
+    base = canon(churn_run())
+    assert canon(churn_run(record_events=False)) == base
+    assert canon(churn_run(capture_snapshots=True)) == base
+    assert canon(churn_run(obs=ObsRecorder(op_slices=False))) == base
+
+
+def test_simulated_report_strips_wall_clock_and_round_trips():
+    report = churn_run()
+    d = simulated_report_dict(report)
+    assert "engine" not in d
+    assert all("events" not in t for t in d["tenants"])
+    for t in d["tenants"]:
+        assert t.get("renegotiation_solve_ms", 0.0) == 0.0
+    assert json.loads(json.dumps(d, sort_keys=True)) == d
+
+
+# ------------------------------------------------------------------ metrics
+def test_metrics_registry_counters_gauges_and_collisions(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("a.b").inc()
+    reg.counter("a.b").inc(2.5)
+    reg.gauge("g").set(3.0)
+    reg.gauge("g").set_max(1.0)  # no-op: running max
+    assert reg.snapshot() == {"a.b": 3.5, "g": 3.0}
+    with pytest.raises(ValueError):
+        reg.gauge("a.b")
+    with pytest.raises(ValueError):
+        reg.counter("g")
+    out = tmp_path / "metrics.jsonl"
+    reg.append_jsonl(str(out), extra={"cell": "t1"})
+    reg.counter("a.b").inc()
+    reg.append_jsonl(str(out))
+    lines = [json.loads(l) for l in out.read_text().splitlines()]
+    assert [l["metrics"]["a.b"] for l in lines] == [3.5, 4.5]
+    assert lines[0]["cell"] == "t1" and "written_at" in lines[1]
+
+
+def test_recorder_folds_hooks_into_metrics():
+    rec = ObsRecorder()
+    report = churn_run(obs=rec)
+    snap = rec.metrics.snapshot()
+    assert snap["engine.ops"] == len(rec.ops)
+    assert snap["admission.admitted"] == len(rec.admissions)
+    assert snap["engine.transfers.in"] + snap["engine.transfers.out"] == len(rec.transfers)
+    assert snap["engine.makespan_s"] == pytest.approx(report.makespan_s)
+
+
+# ---------------------------------------------------------------- CLI glue
+def test_cli_obs_args_and_export(tmp_path, capsys):
+    ap = argparse.ArgumentParser()
+    add_obs_args(ap)
+    args = ap.parse_args([])
+    assert args.record_events is True and args.trace_out is None
+    assert recorder_for(args) is None
+
+    out = tmp_path / "t.trace.json"
+    args = ap.parse_args(["--no-record-events", "--trace-out", str(out)])
+    assert args.record_events is False
+    rec = recorder_for(args)
+    assert isinstance(rec, ObsRecorder)
+    report = churn_run(obs=rec, record_events=args.record_events)
+    export_trace(args, rec, report)
+    assert "wrote" in capsys.readouterr().out
+    checker = _load_check_trace()
+    assert checker.check_trace(str(out)) == []

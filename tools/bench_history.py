@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Aggregate committed ``BENCH_*.json`` reports into one trajectory summary.
+
+Every benchmark writes a machine-readable report through
+``benchmarks.common.write_bench_json`` (stamped with ``_meta``: schema
+version, git SHA, timestamp), and those reports are committed — so the git
+history of each ``BENCH_*.json`` *is* the performance trajectory of the
+repo.  This tool walks that history (``git log`` + ``git show``), flattens
+each revision's numeric scalars into dotted paths, and emits one summary:
+
+  per file, per commit (oldest -> newest): {sha, date, metrics{...}}
+
+plus a human-readable first->last delta table for every metric that moved.
+No third-party deps and no jax import — safe anywhere git is.
+
+Usage:
+  python tools/bench_history.py [FILES...] [--json OUT] [--depth N] [--match SUBSTR]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git(*args: str) -> str:
+    out = subprocess.run(
+        ["git", *args], capture_output=True, text=True, cwd=REPO, timeout=60
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"git {' '.join(args)}: {out.stderr.strip()}")
+    return out.stdout
+
+
+def flatten(obj, prefix: str = "", depth: int = 3):
+    """Yield (dotted-path, value) for numeric/bool scalars up to ``depth``."""
+    if isinstance(obj, bool) or isinstance(obj, (int, float)):
+        yield prefix, obj
+        return
+    if depth <= 0 or not isinstance(obj, dict):
+        return
+    for k, v in obj.items():
+        if k == "_meta":
+            continue
+        path = f"{prefix}.{k}" if prefix else str(k)
+        yield from flatten(v, path, depth - 1)
+
+
+def history(relpath: str, depth: int) -> list[dict]:
+    """Oldest->newest [{sha, date, schema_version, metrics}] for one file."""
+    log = _git("log", "--reverse", "--format=%H %cI", "--", relpath)
+    entries = []
+    for line in log.splitlines():
+        sha, _, date = line.strip().partition(" ")
+        try:
+            payload = json.loads(_git("show", f"{sha}:{relpath}"))
+        except (RuntimeError, ValueError):
+            continue  # deleted or unparsable at this revision
+        meta = payload.get("_meta", {}) if isinstance(payload, dict) else {}
+        entries.append(
+            {
+                "sha": sha,
+                "date": date,
+                "schema_version": meta.get("schema_version"),
+                "metrics": dict(flatten(payload, depth=depth)),
+            }
+        )
+    return entries
+
+
+def delta_table(entries: list[dict], match: str | None) -> list[tuple]:
+    """(metric, first, last, n_revisions) for metrics present in >1 revision."""
+    if not entries:
+        return []
+    rows = []
+    seen: dict[str, list] = {}
+    for e in entries:
+        for k, v in e["metrics"].items():
+            seen.setdefault(k, []).append(v)
+    for k in sorted(seen):
+        if match and match not in k:
+            continue
+        vals = seen[k]
+        rows.append((k, vals[0], vals[-1], len(vals)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="bench reports (default: all committed BENCH_*.json)")
+    ap.add_argument("--json", default=None, help="write the full trajectory here")
+    ap.add_argument("--depth", type=int, default=3,
+                    help="flattening depth for nested metrics")
+    ap.add_argument("--match", default=None,
+                    help="only print metrics whose path contains this substring")
+    args = ap.parse_args(argv)
+
+    files = args.files or sorted(
+        os.path.relpath(p, REPO) for p in glob.glob(os.path.join(REPO, "BENCH_*.json"))
+    )
+    if not files:
+        print("no BENCH_*.json found", file=sys.stderr)
+        return 1
+
+    summary = {}
+    for rel in files:
+        entries = history(rel, args.depth)
+        summary[rel] = entries
+        print(f"{rel}: {len(entries)} committed revision(s)")
+        for metric, first, last, n in delta_table(entries, args.match):
+            if n < 2 or first == last:
+                continue
+            arrow = f"{first!r} -> {last!r}"
+            print(f"  {metric:55s} {arrow}  ({n} revs)")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

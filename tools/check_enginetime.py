@@ -28,18 +28,20 @@ from pathlib import Path
 BASELINE = Path(__file__).resolve().parent / "enginetime_baseline.json"
 TOLERANCE = 0.25   # fail on >1.25x relative engine-time regression
 NOISE_FLOOR_S = 0.010  # cells still under 10 ms are noise, never a failure
-CELLS = ("churn", "churn_reneg", "mesh_data4")
+CELLS = ("churn", "churn_reneg", "churn_obs", "mesh_data4")
 
 
 def measure(repeats: int = 1) -> dict:
     """Per-cell {fast_s, ref_s} minima over ``repeats`` smoke runs."""
     from benchmarks.bench_engine import run
 
-    out: dict = {"reports_equal": True, "suffix_replay_identical": True, "cells": {}}
+    out: dict = {"reports_equal": True, "suffix_replay_identical": True,
+                 "ledger_sums": True, "cells": {}}
     for _ in range(repeats):
         result = run(smoke=True)
         out["reports_equal"] &= result["all_reports_equal"]
         out["suffix_replay_identical"] &= result["suffix_replay_identical"]
+        out["ledger_sums"] &= result.get("ledger_sums", True)
         for name in CELLS:
             cell = result[name]
             cur = {"fast_s": cell["fast_s"], "ref_s": cell["ref_s"]}
@@ -65,6 +67,9 @@ def main(argv=None) -> int:
         return 1
     if not current["suffix_replay_identical"]:
         print("FAIL suffix_replay: snapshot resume diverged from full replay", file=sys.stderr)
+        return 1
+    if not current["ledger_sums"]:
+        print("FAIL ledger_sums: attribution buckets do not sum to overhead", file=sys.stderr)
         return 1
     if args.write:
         BASELINE.write_text(json.dumps(current, indent=2, sort_keys=True) + "\n")

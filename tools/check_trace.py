@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Validate a repro.obs trace file (CI gate for trace export).
+
+Checks, per file:
+  1. Well-formed Chrome-trace-event JSON: an object with a ``traceEvents``
+     list, every event carrying a known phase, numeric ts/dur, and pid/tid
+     where the phase requires them; ``otherData.schema_version`` matches.
+  2. Slices are non-overlapping per track: within each (pid, tid) row the
+     ``X`` slices, sorted by start, never start before the previous slice
+     ended (modulo float-ulp tolerance from the seconds->µs scaling).
+  3. Flow events pair up: every flow-start (``ph: s``) id terminates in
+     exactly one flow-finish (``ph: f``) and no finish lacks a start.
+  4. The embedded report's stall-attribution ledgers sum to the reported
+     overhead: for every completed tenant, the cause buckets (everything
+     except the informational keys) add up to ``overhead_s``.
+
+Usage:
+  python tools/check_trace.py TRACE [TRACE ...]
+
+Exit 0 when every file passes; prints one line per failure otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+EXPECT_SCHEMA = 1
+KNOWN_PHASES = {"X", "B", "E", "i", "I", "C", "M", "s", "t", "f"}
+# Attribution keys outside the sums-to-overhead invariant: the total itself,
+# admission queueing (precedes the overhead window) and host wall-clock.
+LEDGER_INFORMATIONAL = {"overhead_s", "queue_wait_s", "renegotiation_solve_s"}
+
+
+def _tol(x: float) -> float:
+    return 1e-6 + 1e-9 * abs(x)
+
+
+def check_trace(path: str) -> list[str]:
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable trace JSON: {e}"]
+
+    if not isinstance(trace, dict) or not isinstance(trace.get("traceEvents"), list):
+        return [f"{path}: not a trace-event JSON object with a traceEvents list"]
+    events = trace["traceEvents"]
+    other = trace.get("otherData", {})
+    if other.get("schema_version") != EXPECT_SCHEMA:
+        errors.append(
+            f"{path}: otherData.schema_version "
+            f"{other.get('schema_version')!r} != {EXPECT_SCHEMA}"
+        )
+
+    # --- 1. event well-formedness, collecting slices and flows on the way
+    slices: dict[tuple, list[tuple[float, float, str]]] = {}
+    flow_starts: dict = {}
+    flow_finishes: dict = {}
+    for k, e in enumerate(events):
+        where = f"{path}: traceEvents[{k}]"
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if "name" not in e or "pid" not in e:
+            errors.append(f"{where}: missing name/pid")
+            continue
+        if ph == "M":
+            continue  # metadata: no timestamp
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"{where}: non-numeric ts {ts!r}")
+            continue
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: X slice with bad dur {dur!r}")
+                continue
+            key = (e["pid"], e.get("tid", 0))
+            slices.setdefault(key, []).append((float(ts), float(dur), e["name"]))
+        elif ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not all(
+                isinstance(v, (int, float)) for v in args.values()
+            ):
+                errors.append(f"{where}: counter with non-numeric args {args!r}")
+        elif ph in ("s", "f"):
+            book = flow_starts if ph == "s" else flow_finishes
+            fid = e.get("id")
+            if fid is None:
+                errors.append(f"{where}: flow event without id")
+            elif fid in book:
+                errors.append(f"{where}: duplicate flow {ph!r} id {fid!r}")
+            else:
+                book[fid] = where
+
+    # --- 2. per-track slice overlap
+    for (pid, tid), rows in sorted(slices.items()):
+        rows.sort()
+        prev_end, prev_name = None, None
+        for ts, dur, name in rows:
+            if prev_end is not None and ts < prev_end - _tol(prev_end):
+                errors.append(
+                    f"{path}: track pid={pid} tid={tid}: slice {name!r} at "
+                    f"ts={ts} overlaps previous {prev_name!r} ending {prev_end}"
+                )
+            end = ts + dur
+            if prev_end is None or end > prev_end:
+                prev_end, prev_name = end, name
+
+    # --- 3. flow pairing
+    for fid, where in sorted(flow_starts.items()):
+        if fid not in flow_finishes:
+            errors.append(f"{where}: flow start id {fid!r} never finishes")
+    for fid, where in sorted(flow_finishes.items()):
+        if fid not in flow_starts:
+            errors.append(f"{where}: flow finish id {fid!r} without a start")
+
+    # --- 4. attribution ledgers in the embedded report
+    report = other.get("report")
+    if isinstance(report, dict):
+        checked = 0
+        for t in report.get("tenants", ()):
+            if t.get("status") != "completed":
+                continue
+            ledger = t.get("attribution")
+            if not isinstance(ledger, dict):
+                errors.append(f"{path}: tenant {t.get('name')!r} has no attribution ledger")
+                continue
+            total = ledger.get("overhead_s", 0.0)
+            summed = sum(
+                v for kk, v in ledger.items() if kk not in LEDGER_INFORMATIONAL
+            )
+            if abs(summed - total) > _tol(total):
+                errors.append(
+                    f"{path}: tenant {t.get('name')!r} ledger sums to "
+                    f"{summed!r}, overhead_s is {total!r}"
+                )
+            checked += 1
+        if checked == 0 and report.get("tenants"):
+            errors.append(f"{path}: embedded report has no completed tenants to check")
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or []
+    if not paths:
+        print("usage: check_trace.py TRACE [TRACE ...]", file=sys.stderr)
+        return 2
+    failures = 0
+    for path in paths:
+        errs = check_trace(path)
+        if errs:
+            failures += 1
+            for e in errs:
+                print(f"FAIL {e}")
+        else:
+            with open(path) as f:
+                n = len(json.load(f)["traceEvents"])
+            print(f"ok   {path}: {n} events, tracks and ledgers consistent")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

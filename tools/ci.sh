@@ -45,6 +45,16 @@ echo "== churn smoke benchmark: renegotiation vs FIFO queueing =="
 python -m benchmarks.bench_churn --smoke --out "${TMPDIR:-/tmp}/BENCH_churn_smoke.json" \
   || { echo "FAIL churn bench"; status=1; }
 
+echo "== obs trace export smoke + trace validation =="
+# Regenerates both example traces into a temp dir, then validates the fresh
+# and the committed copies with tools/check_trace.py: well-formed Chrome
+# trace events, non-overlapping slices per track, paired flow arrows, and a
+# stall-attribution ledger that sums exactly to each tenant's overhead.
+python tools/export_example_traces.py --out-dir "${TMPDIR:-/tmp}/repro_traces" \
+  && python tools/check_trace.py "${TMPDIR:-/tmp}/repro_traces"/*.trace.json \
+  && python tools/check_trace.py examples/traces/*.trace.json \
+  || { echo "FAIL trace export"; status=1; }
+
 echo "== dist smoke benchmark: per-shard plans + host-link contention gates =="
 # Exits non-zero unless the per-device planned peak stays within the shard
 # fraction of the replicated plan (+ replicated bytes), the shared-link

@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Regenerate the committed example traces under ``examples/traces/``.
+
+Two runs, the two shapes the README quickstart points Perfetto at:
+
+  churn.trace.json       bench_engine-style Poisson churn (renegotiation
+                         on): tenant rows with queued/stall/op slices,
+                         renegotiation flow arrows, HBM counters.
+  mesh_data4.trace.json  a contended data=4 mesh: per-device DMA channel
+                         rows, host-link lanes, collective blackout track.
+
+Workloads are seeded and the engine is deterministic, so regenerated files
+differ only in the wall-clock fields (re-solve milliseconds in the embedded
+report) — ``tools/check_trace.py`` excludes those from its invariants and
+CI validates the committed files on every run.
+
+Usage:
+  PYTHONPATH=src python tools/export_example_traces.py [--out-dir examples/traces]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.bench_engine import (
+    HW,
+    SIZE_THRESHOLD,
+    build_templates,
+    churn_tenants,
+    ledger_sums,
+    mesh_tenants,
+)
+from repro.obs import ObsRecorder, write_trace
+from repro.runtime import engine as fast_engine
+from repro.runtime.workload import poisson_workload
+
+
+def export_churn(out_path: str, templates, plans, floors) -> None:
+    items = poisson_workload(
+        list(templates), 40, 20_000.0, seed=7, iterations=(2, 3)
+    )
+    mean_floor = sum(floors.values()) / len(floors)
+    recorder = ObsRecorder()
+    rt = fast_engine.MemoryRuntime(
+        HW, budget=int(mean_floor * 10), channels=2, renegotiate=True,
+        replan_size_threshold=SIZE_THRESHOLD, obs=recorder,
+    )
+    report = rt.run(churn_tenants(fast_engine, templates, plans, items))
+    assert ledger_sums(report), "churn example: ledger does not sum"
+    trace = write_trace(out_path, recorder, report)
+    print(f"wrote {out_path}: {len(trace['traceEvents'])} events, "
+          f"{report.renegotiations} renegotiations")
+
+
+def export_mesh(out_path: str, templates, plans) -> None:
+    recorder = ObsRecorder()
+    rt = fast_engine.MemoryRuntime(
+        HW, channels=2, link=fast_engine.HostLink.make(HW.link_bw, 2),
+        obs=recorder,
+    )
+    report = rt.run(mesh_tenants(fast_engine, templates, plans, 4, 3))
+    assert ledger_sums(report), "mesh example: ledger does not sum"
+    trace = write_trace(out_path, recorder, report)
+    print(f"wrote {out_path}: {len(trace['traceEvents'])} events, "
+          f"{len(recorder.blackouts)} link blackouts")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "examples", "traces"))
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    templates, plans, floors = build_templates()
+    export_churn(os.path.join(args.out_dir, "churn.trace.json"),
+                 templates, plans, floors)
+    export_mesh(os.path.join(args.out_dir, "mesh_data4.trace.json"),
+                templates, plans)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
