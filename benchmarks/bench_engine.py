@@ -274,6 +274,54 @@ def churn_obs_cell(templates, plans, floors, smoke: bool, seed: int) -> dict:
     }
 
 
+def tune_cell(templates, plans, floors, smoke: bool, seed: int) -> dict:
+    """Ledger victim policy vs floor-greedy on the reneg churn shape.
+
+    ``fast_s`` — the gated quantity — is the ledger-policy run: every
+    renegotiation snapshots the engine at the loop top and replays the
+    suffix once per candidate, so this cell bounds the probing overhead
+    relative to the greedy baseline (``ref_s``) on the same workload.
+    ``reports_equal`` pins the greedy default against the frozen reference
+    engine (the ledger run legitimately diverges — it picks different
+    victims)."""
+    from repro.tune import LedgerVictimPolicy
+
+    n = 12 if smoke else 120
+    items = poisson_workload(
+        ["small", "medium"], n, 50.0, seed=seed + 2, iterations=(1, 3))
+    budget = floors["large"] + (floors["small"] + floors["medium"]) // 2
+
+    def mk(mod):
+        ts = [mod.Tenant(
+            "base", templates["large"], list(plans["large"][1]),
+            limit=plans["large"][0], iterations=max(6, n // 2), priority=0.5)]
+        return ts + churn_tenants(mod, templates, plans, items)
+
+    policy = LedgerVictimPolicy()
+    _, ledger_rep, ledger_s = timed_run(
+        fast_engine, mk, budget=budget, channels=2, renegotiate=True,
+        victim_policy=policy, record_events=False)
+    _, greedy_rep, greedy_s = timed_run(
+        fast_engine, mk, budget=budget, channels=2, renegotiate=True,
+        record_events=False)
+    _, ref_rep, _ = timed_run(
+        ref_engine, mk, budget=budget, channels=2, renegotiate=True)
+
+    events = ledger_rep.engine["events"]
+    return {
+        "tenants": n + 1,
+        "budget": budget,
+        "events": events,
+        "fast_s": ledger_s,               # ledger probing path: gated
+        "ref_s": greedy_s,                # floor-greedy on the same workload
+        "probes": policy.probes,
+        "staged": policy.staged,
+        "probe_cost": ledger_s / greedy_s if greedy_s else 0.0,
+        "renegotiations": ledger_rep.renegotiations,
+        "reports_equal": canon(greedy_rep) == canon(ref_rep),
+    }
+
+
 def mesh_cell(templates, plans, smoke: bool) -> dict:
     """data=4 mesh: per-device pools, collectives, contended HostLink."""
     iterations = 3 if smoke else 50
@@ -302,9 +350,11 @@ def run(smoke: bool = False, seed: int = 11) -> dict:
     reneg = churn_reneg_cell(templates, plans, floors, smoke, seed)
     obs = churn_obs_cell(templates, plans, floors, smoke, seed)
     mesh = mesh_cell(templates, plans, smoke)
+    tune = tune_cell(templates, plans, floors, smoke, seed)
     all_equal = (
         churn["reports_equal"] and reneg["reports_equal"]
         and obs["reports_equal"] and mesh["reports_equal"]
+        and tune["reports_equal"]
     )
     return {
         "mode": "smoke" if smoke else "full",
@@ -315,6 +365,7 @@ def run(smoke: bool = False, seed: int = 11) -> dict:
         "churn_reneg": reneg,
         "churn_obs": obs,
         "mesh_data4": mesh,
+        "tune": tune,
         "all_reports_equal": all_equal,
         "suffix_replay_identical": reneg["suffix_replay_identical"],
         "ledger_sums": obs["ledger_sums"],
@@ -366,6 +417,12 @@ def main(argv=None) -> int:
     print(
         f"  mesh data=4 {m['iterations']:4d} iters  {m['events']:7d} events  "
         f"speedup {m['speedup']:5.2f}x  equal={m['reports_equal']}"
+    )
+    t = result["tune"]
+    print(
+        f"  tune       {t['tenants']:5d} tenants  {t['events']:7d} events  "
+        f"probe cost {t['probe_cost']:5.2f}x ({t['probes']} probes, "
+        f"{t['staged']} staged)  equal={t['reports_equal']}"
     )
     print(f"wrote {args.out}; acceptance: {result['acceptance']}")
     return 0 if (ok_equal and ok_suffix and ok_ledger and ok_speedup) else 1

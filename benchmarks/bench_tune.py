@@ -1,0 +1,379 @@
+"""Tuning benchmark: ledger-guided runtime decisions vs the static defaults.
+
+Three cells, one per ``repro.tune`` decision surface:
+
+  * **victim** — an anchor tenant (lowest priority, transfer-bound: squeezing
+    it is expensive) and a nimble tenant (slightly higher priority,
+    compute-rich: swaps hide under compute, squeezing it is nearly free)
+    share one HBM budget with a seeded Poisson newcomer stream.  Floor-greedy
+    victim selection always shrinks the anchor (lowest priority first); the
+    ledger policy probes each candidate by replaying the suffix from the
+    loop-top snapshot and picks the squeeze with the lowest SLO-weighted
+    marginal stall.  Gate: ledger beats greedy on mean newcomer queue wait at
+    equal-or-lower total added victim overhead, with zero overflow events.
+  * **budget_split** — colocation cells whose programs have unequal
+    priorities.  ``proportional_shares`` ignores priority entirely; the
+    coordinate-descent tuner moves budget toward the high-priority program
+    until SLO-weighted marginal stall equalizes.  Gate: tuned never worse on
+    any cell and strictly better on at least one.
+  * **lanes** — a contended ``data=4`` mesh where swap-ins queue behind
+    swap-outs on the shared host-link lane pool.  ``run_mesh`` probes the
+    per-direction queue-wait decomposition and carves the lanes
+    asymmetrically.  Gate: the directional carve is never worse than the
+    static pool on this workload.
+
+A fourth check pins the defaults: with every tuning knob at its default the
+victim workload's report stays bit-identical to the frozen
+``runtime/_engine_reference.py`` engine.
+
+Writes ``BENCH_tune.json`` (``--out``); exits non-zero when an acceptance
+flag fails.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_tune [--smoke] [--out BENCH_tune.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.common import write_bench_json
+from repro.core.autoswap import AutoSwapPlanner
+from repro.core.simulator import GTX_1080TI
+from repro.plan import MemoryProgram
+from repro.runtime import (
+    MemoryRuntime,
+    Tenant,
+    colocate_programs,
+    planned_peak,
+    poisson_workload,
+    synthetic_train_trace,
+)
+from repro.runtime import _engine_reference as ref_engine
+from repro.runtime.engine import simulated_report_dict
+from repro.tune import LedgerVictimPolicy, slo_weighted_stall
+
+HW = GTX_1080TI
+SIZE_THRESHOLD = 1 << 20
+LIMIT_FRAC = 0.7          # each plan solved at 70% of its trace peak
+
+
+def solve_template(trace):
+    pl = AutoSwapPlanner(trace, HW, size_threshold=SIZE_THRESHOLD)
+    limit = int(pl.peak_load * LIMIT_FRAC)
+    decisions = pl.select(limit, "swdoa")
+    return limit, decisions, planned_peak(trace, decisions)
+
+
+# ------------------------------------------------------------- victim cell
+def build_victim_workload(smoke: bool, seed: int):
+    """Anchor (cheap to pick, expensive to squeeze) + nimble (the reverse)
+    + a Poisson newcomer stream that doesn't fit next to both floors."""
+    if smoke:
+        anchor_layers, anchor_iters = 10, 5
+        nimble_iters = 12
+        n_arrivals, rate_hz = 4, 60.0
+    else:
+        anchor_layers, anchor_iters = 14, 8
+        nimble_iters = 20
+        n_arrivals, rate_hz = 8, 40.0
+    templates = {
+        # Transfer-bound: little compute to hide extra swaps under, so a
+        # lower limit costs real stall.  Lowest priority -> greedy's pick.
+        "anchor": synthetic_train_trace(anchor_layers, flops_per_op=2e8),
+        # Compute-rich with a large floor: swaps overlap compute, so the
+        # same squeeze is nearly free -- the ledger finds this by probing.
+        "nimble": synthetic_train_trace(
+            5, act_bytes=24 << 20, weight_bytes=12 << 20, flops_per_op=4e9
+        ),
+        "small": synthetic_train_trace(4),
+        "medium": synthetic_train_trace(6),
+    }
+    plans = {n: solve_template(tr) for n, tr in templates.items()}
+    floors = {n: p[2] for n, p in plans.items()}
+    items = poisson_workload(
+        ["small", "medium"], n_arrivals, rate_hz, seed=seed, iterations=(1, 3)
+    )
+    iters = {"anchor": anchor_iters, "nimble": nimble_iters}
+    budget = floors["anchor"] + floors["nimble"] + floors["small"] // 2
+    return templates, plans, items, iters, budget
+
+
+def make_victim_tenants(templates, plans, items, iters):
+    tenants = [
+        Tenant(
+            name, templates[name], list(plans[name][1]), limit=plans[name][0],
+            iterations=iters[name], priority=priority,
+        )
+        for name, priority in (("anchor", 0.4), ("nimble", 0.5))
+    ]
+    for it in items:
+        limit, decisions, _ = plans[it.template]
+        tenants.append(
+            Tenant(
+                it.name, templates[it.template], list(decisions), limit=limit,
+                iterations=it.iterations, arrival_t=it.arrival_t, priority=2.0,
+            )
+        )
+    return tenants
+
+
+def run_victim_policy(workload, renegotiate: bool, policy=None):
+    templates, plans, items, iters, budget = workload
+    rt = MemoryRuntime(
+        HW, budget=budget, channels=2, renegotiate=renegotiate,
+        replan_size_threshold=SIZE_THRESHOLD, victim_policy=policy,
+    )
+    report = rt.run(make_victim_tenants(templates, plans, items, iters))
+    waits = [t.queue_wait_s for t in report.tenants if t.arrival_t > 0.0]
+    return report, {
+        "policy": "fifo" if not renegotiate else
+                  (policy.name if policy is not None else "greedy"),
+        "makespan_s": report.makespan_s,
+        "overflow_events": report.overflow_events,
+        "newcomer_mean_wait_s": sum(waits) / len(waits) if waits else 0.0,
+        "newcomer_max_wait_s": max(waits) if waits else 0.0,
+        "renegotiations": report.renegotiations,
+        "renegotiations_cancelled": report.renegotiations_cancelled,
+        "renegotiation_freed_bytes": report.renegotiation_freed_bytes,
+        "victim_overhead": {
+            t.name: t.overhead for t in report.tenants if t.arrival_t == 0.0
+        },
+        "tenants": [t.as_dict() for t in report.tenants],
+    }
+
+
+def victim_cell(workload) -> dict:
+    _, fifo = run_victim_policy(workload, renegotiate=False)
+    _, greedy = run_victim_policy(workload, renegotiate=True)
+    policy = LedgerVictimPolicy()
+    _, ledger = run_victim_policy(workload, renegotiate=True, policy=policy)
+
+    def added_overhead(row):
+        return {
+            name: oh - fifo["victim_overhead"][name]
+            for name, oh in row["victim_overhead"].items()
+        }
+    greedy_added, ledger_added = added_overhead(greedy), added_overhead(ledger)
+    cell = {
+        "fifo": fifo,
+        "greedy": greedy,
+        "ledger": ledger,
+        "greedy_added_victim_overhead": greedy_added,
+        "ledger_added_victim_overhead": ledger_added,
+        "ledger_probes": policy.probes,
+        "ledger_staged": policy.staged,
+        "ledger_decisions": policy.decision_log,
+        "acceptance": {
+            "ledger_beats_greedy_mean_wait":
+                ledger["newcomer_mean_wait_s"] < greedy["newcomer_mean_wait_s"],
+            "ledger_victim_overhead_not_worse":
+                sum(ledger_added.values()) <= sum(greedy_added.values()) + 1e-12,
+            "zero_overflow_events": ledger["overflow_events"] == 0,
+        },
+    }
+    return cell
+
+
+# ------------------------------------------------------- budget-split cells
+def split_cell(layer_sets: dict, priorities: dict, budget_frac: float,
+               split_evals: int = 24) -> dict:
+    progs = {
+        name: MemoryProgram.from_trace(synthetic_train_trace(n))
+        for name, n in layer_sets.items()
+    }
+    kw = dict(hw=HW, budget_frac=budget_frac, channels=2,
+              size_threshold=SIZE_THRESHOLD, iterations=2,
+              priorities=priorities)
+    prop = colocate_programs(progs, **kw)
+    tuned = colocate_programs(progs, budget_split="tuned",
+                              split_evals=split_evals, **kw)
+    prop_stall = slo_weighted_stall(prop.report)
+    tuned_stall = slo_weighted_stall(tuned.report)
+    return {
+        "programs": {n: {"layers": l, "priority": priorities[n]}
+                     for n, l in layer_sets.items()},
+        "budget_frac": budget_frac,
+        "budget": tuned.budget,
+        "proportional_shares": prop.shares,
+        "tuned_shares": tuned.shares,
+        "proportional_stall_s": prop_stall,
+        "tuned_stall_s": tuned_stall,
+        "split_tuning": tuned.split_tuning,
+        "strict_win": tuned_stall < prop_stall,
+        "not_worse": tuned_stall <= prop_stall + 1e-12,
+        "all_completed": all(t.status == "completed"
+                             for t in tuned.report.tenants),
+    }
+
+
+def budget_split_cells(smoke: bool) -> dict:
+    cells = {
+        "hi_lo": split_cell({"big": 12, "small": 4},
+                            {"big": 4.0, "small": 0.5}, 0.6),
+    }
+    if not smoke:
+        cells["three_way"] = split_cell(
+            {"big": 12, "mid": 8, "small": 4},
+            {"big": 4.0, "mid": 1.0, "small": 0.25}, 0.6,
+        )
+    return {
+        "cells": cells,
+        "acceptance": {
+            "tuned_never_worse": all(c["not_worse"] for c in cells.values()),
+            "tuned_strictly_better_somewhere":
+                any(c["strict_win"] for c in cells.values()),
+            "all_completed": all(c["all_completed"] for c in cells.values()),
+        },
+    }
+
+
+# --------------------------------------------------------------- lanes cell
+def lanes_cell(smoke: bool) -> dict:
+    """Contended data=4 mesh where swap-ins queue behind swap-outs on the
+    shared lane pool; ``lane_split="directional"`` probes and carves."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import MeshSpec, capture_sharded_trace, run_mesh, solve_sharded
+
+    def step(w, x):
+        g = jax.grad(lambda w: ((jax.nn.relu(x @ w)) ** 2).sum())(w)
+        return w - 0.01 * g
+
+    dim = 128
+    w = jax.ShapeDtypeStruct((dim, dim), jnp.float32)
+    x = jax.ShapeDtypeStruct((dim // 2, dim), jnp.float32)
+    cap = capture_sharded_trace(
+        step, w, x, mesh=MeshSpec.make(data=4), hw=HW,
+        in_specs=(P(None, None), P("data", None)), arg_names=["w", "x"],
+        extra_collectives=[("all_reduce", dim * dim * 4)],
+    )
+    solved = solve_sharded(cap, HW, limit_frac=0.5, size_threshold=1)
+    kw = dict(channels=2, iterations=2 if smoke else 3, link_lanes=3,
+              link_bw=HW.link_bw * 0.5, record_events=False)
+    static = run_mesh(solved, HW, lane_split="static", **kw)
+    directional = run_mesh(solved, HW, lane_split="directional", **kw)
+    return {
+        "mesh": "data=4",
+        "link_lanes": 3,
+        "static_makespan_s": static.makespan_s,
+        "directional_makespan_s": directional.makespan_s,
+        "static_mean_overhead": static.mean_overhead(),
+        "directional_mean_overhead": directional.mean_overhead(),
+        "lane_info": directional.lane_info,
+        "acceptance": {
+            "directional_not_worse":
+                directional.makespan_s <= static.makespan_s + 1e-12,
+            "probe_carved_lanes":
+                (directional.lane_info or {}).get("out_lanes") is not None,
+        },
+    }
+
+
+# ------------------------------------------------------- defaults identity
+def defaults_identity(workload) -> dict:
+    """Victim workload at all-default knobs: fast engine vs the frozen
+    reference engine, byte-identical canonical reports."""
+    templates, plans, items, iters, budget = workload
+
+    def run_engine(mod):
+        rt = mod.MemoryRuntime(
+            HW, budget=budget, channels=2, renegotiate=True,
+            replan_size_threshold=SIZE_THRESHOLD,
+        )
+        tenants = [
+            mod.Tenant(
+                name, templates[name], list(plans[name][1]),
+                limit=plans[name][0], iterations=iters[name], priority=pri,
+            )
+            for name, pri in (("anchor", 0.4), ("nimble", 0.5))
+        ] + [
+            mod.Tenant(
+                it.name, templates[it.template], list(plans[it.template][1]),
+                limit=plans[it.template][0], iterations=it.iterations,
+                arrival_t=it.arrival_t, priority=2.0,
+            )
+            for it in items
+        ]
+        return rt.run(tenants)
+
+    import repro.runtime.engine as fast_engine
+
+    fast_canon = json.dumps(
+        simulated_report_dict(run_engine(fast_engine)), sort_keys=True)
+    ref_canon = json.dumps(
+        simulated_report_dict(run_engine(ref_engine)), sort_keys=True)
+    return {"bit_for_bit_equal": fast_canon == ref_canon}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces / short stream for CI")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--out", default="BENCH_tune.json")
+    args = ap.parse_args(argv)
+
+    workload = build_victim_workload(args.smoke, args.seed)
+    victim = victim_cell(workload)
+    split = budget_split_cells(args.smoke)
+    lanes = lanes_cell(args.smoke)
+    identity = defaults_identity(workload)
+
+    acceptance = {
+        **{f"victim_{k}": v for k, v in victim["acceptance"].items()},
+        **{f"split_{k}": v for k, v in split["acceptance"].items()},
+        **{f"lanes_{k}": v for k, v in lanes["acceptance"].items()},
+        "defaults_bit_identical_to_reference": identity["bit_for_bit_equal"],
+    }
+    report = {
+        "mode": "smoke" if args.smoke else "full",
+        "hardware": HW.name,
+        "seed": args.seed,
+        "limit_frac": LIMIT_FRAC,
+        "budget": workload[4],
+        "victim": victim,
+        "budget_split": split,
+        "lanes": lanes,
+        "defaults_identity": identity,
+        "acceptance": acceptance,
+    }
+    write_bench_json(args.out, report)
+
+    g, l = victim["greedy"], victim["ledger"]
+    print(
+        f"tune ({report['mode']}): victim cell -- "
+        f"greedy mean wait {g['newcomer_mean_wait_s']*1e3:.2f}ms, "
+        f"ledger {l['newcomer_mean_wait_s']*1e3:.2f}ms "
+        f"({victim['ledger_probes']} probes, {victim['ledger_staged']} staged)"
+    )
+    print(
+        f"  added victim overhead: greedy "
+        f"{sum(victim['greedy_added_victim_overhead'].values())*100:.2f}pp, "
+        f"ledger {sum(victim['ledger_added_victim_overhead'].values())*100:.2f}pp; "
+        f"overflow greedy {g['overflow_events']} / ledger {l['overflow_events']}"
+    )
+    for name, c in split["cells"].items():
+        print(
+            f"  split[{name}]: proportional {c['proportional_stall_s']*1e3:.3f}ms "
+            f"-> tuned {c['tuned_stall_s']*1e3:.3f}ms "
+            f"({len(c['split_tuning']['moves'])} moves, "
+            f"{c['split_tuning']['evals']} trial colocations)"
+        )
+    carve = (lanes["lane_info"] or {}).get("out_lanes")
+    print(
+        f"  lanes: static {lanes['static_makespan_s']*1e3:.3f}ms -> "
+        f"directional {lanes['directional_makespan_s']*1e3:.3f}ms "
+        f"(carve {carve} out / {lanes['link_lanes'] - carve if carve else '-'} in)"
+    )
+    print(f"  defaults bit-identical to reference: {identity['bit_for_bit_equal']}")
+    print(f"wrote {args.out}; acceptance: {acceptance}")
+    return 0 if all(acceptance.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,12 @@ class MeshRunResult:
     schedules: dict[str, dict[str, list[tuple[int, float, float]]]] = field(
         default_factory=dict
     )
+    # HostLink lane policy: "static" (shared pool, the default) or
+    # "directional" (lanes carved between swap-out and swap-in from a probe
+    # run's per-direction queue-wait split — ``repro.tune.lanes``).
+    # ``lane_info`` records the probe evidence and the chosen carve.
+    lane_split: str = "static"
+    lane_info: dict | None = None
 
     @property
     def makespan_s(self) -> float:
@@ -91,6 +97,7 @@ def run_mesh(
     prefetch: str = "backsched",
     record_events: bool = True,
     obs=None,
+    lane_split: str = "static",
 ) -> MeshRunResult:
     """Execute the solved per-device plans mesh-wide.
 
@@ -100,6 +107,14 @@ def run_mesh(
     globally).  ``contended=False`` removes the shared link entirely
     (every device gets its full private bandwidth — the upper bound).
 
+    ``lane_split="directional"`` first runs an unlogged probe over the same
+    configuration with the default shared lane pool, reads the link's
+    per-direction queue-wait decomposition, and carves the lanes between
+    swap-out and swap-in proportionally (``repro.tune.lane_split_from_waits``)
+    for the reported run.  Falls back to the shared pool when the probe
+    shows no directional evidence (or ``link_lanes < 2``); the chosen carve
+    and the probe evidence land in ``MeshRunResult.lane_info``.
+
     ``record_events=False`` drops the per-transfer logs for long-horizon
     runs; ``schedules`` is then empty (``schedules_differ`` needs the logs,
     so keep the default when comparing schedule variants).
@@ -107,12 +122,36 @@ def run_mesh(
     ``obs`` attaches a ``repro.obs.ObsRecorder`` for Perfetto trace export
     (pure observer: the report is bit-identical with or without it).
     """
+    if lane_split not in ("static", "directional"):
+        raise ValueError(f"unknown lane_split {lane_split!r}")
+    total_bw = link_bw if link_bw is not None else hw.link_bw
+    lanes = link_lanes if link_lanes is not None else 2
+    out_lanes = None
+    lane_info = None
+    if lane_split == "directional" and contended:
+        from ..tune.lanes import lane_split_from_waits
+
+        probe = MemoryRuntime(
+            hw, budget=budget_per_device, channels=channels, prefetch=prefetch,
+            link=HostLink.make(total_bw=total_bw, lanes=lanes),
+            contention_aware=contention_aware, record_events=False,
+        )
+        probe.run(mesh_tenants(solved, iterations=iterations))
+        out_lanes = lane_split_from_waits(
+            probe.link.wait_in_s, probe.link.wait_out_s, lanes,
+            bytes_in=probe.link.bytes_in, bytes_out=probe.link.bytes_out,
+        )
+        lane_info = {
+            "probe_wait_in_s": probe.link.wait_in_s,
+            "probe_wait_out_s": probe.link.wait_out_s,
+            "probe_bytes_in": probe.link.bytes_in,
+            "probe_bytes_out": probe.link.bytes_out,
+            "lanes": lanes,
+            "out_lanes": out_lanes,
+        }
     link = None
     if contended:
-        link = HostLink.make(
-            total_bw=link_bw if link_bw is not None else hw.link_bw,
-            lanes=link_lanes if link_lanes is not None else 2,
-        )
+        link = HostLink.make(total_bw=total_bw, lanes=lanes, out_lanes=out_lanes)
     rt = MemoryRuntime(
         hw,
         budget=budget_per_device,
@@ -140,6 +179,8 @@ def run_mesh(
         contended=contended,
         contention_aware=contention_aware,
         schedules=schedules,
+        lane_split=lane_split,
+        lane_info=lane_info,
     )
 
 

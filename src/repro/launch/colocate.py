@@ -183,6 +183,18 @@ def main(argv=None):
     ap.add_argument("--renegotiate", action="store_true",
                     help="shrink a running victim's plan (online re-solve at its next "
                          "iteration barrier) instead of only queueing a newcomer")
+    ap.add_argument("--budget-split", choices=("proportional", "tuned"),
+                    default="proportional",
+                    help="how the shared budget splits across tenants: "
+                         "proportional to isolated peaks, or coordinate-descent "
+                         "tuned to equalize SLO-weighted marginal stall "
+                         "(repro.tune)")
+    ap.add_argument("--victim-policy", choices=("greedy", "ledger"),
+                    default="greedy",
+                    help="renegotiation victim selection: floor-greedy (the "
+                         "reference default) or ledger-driven (probe candidate "
+                         "(victim, limit) pairs by simulated marginal "
+                         "SLO-weighted stall)")
     ap.add_argument("--plan-cache", default=None,
                     help="plan artifact directory shared with the train/serve launchers")
     ap.add_argument("--cache-max-mb", type=float, default=None,
@@ -224,6 +236,12 @@ def main(argv=None):
         for n, t in arrivals.items():
             print(f"[churn] {n}: arrives at {t*1000:.2f}ms")
 
+    victim_policy = None
+    if args.victim_policy == "ledger":
+        from repro.tune import LedgerVictimPolicy
+
+        victim_policy = LedgerVictimPolicy()
+
     recorder = recorder_for(args)
     result = colocate_programs(
         programs, TPU_V5E,
@@ -239,8 +257,25 @@ def main(argv=None):
         renegotiate=args.renegotiate,
         record_events=args.record_events,
         obs=recorder,
+        budget_split=args.budget_split,
+        victim_policy=victim_policy,
     )
     print_colocation(result)
+    if result.split_tuning is not None:
+        st = result.split_tuning
+        print(
+            f"[tune] budget split tuned: SLO-weighted stall "
+            f"{st['initial_stall_s']*1000:.2f}ms -> {st['tuned_stall_s']*1000:.2f}ms "
+            f"({st['evals']} trial colocations, {len(st['moves'])} moves kept)"
+        )
+    if victim_policy is not None and victim_policy.staged:
+        for d in victim_policy.decision_log:
+            print(
+                f"[tune] victim {d['victim']} @ {d['t']*1000:.2f}ms: "
+                f"{d['candidates']} candidates probed, staged limit "
+                f"{d['new_limit']/2**20:.1f}MiB, binding constraint "
+                f"{d['binding_constraint']}"
+            )
     export_trace(args, recorder, result.report)
     if args.json:
         with open(args.json, "w") as f:

@@ -114,6 +114,11 @@ def main(argv=None) -> int:
                     help="global host-link DMA lanes shared by all devices")
     ap.add_argument("--link-bw-frac", type=float, default=1.0,
                     help="shared host-link bandwidth as a fraction of one device link")
+    ap.add_argument("--lane-split", choices=("static", "directional"),
+                    default="static",
+                    help="host-link lane policy for the contended run: shared "
+                         "pool, or lanes carved between swap directions from a "
+                         "probe run's queue-wait split (repro.tune)")
     ap.add_argument("--size-threshold", type=int, default=1 << 18)
     ap.add_argument("--plan-cache", default=None)
     ap.add_argument("--json", default=None)
@@ -169,9 +174,20 @@ def main(argv=None) -> int:
     # The trace observes the headline cell: contended + contention-aware.
     recorder = recorder_for(args)
     contended = run_mesh(solved, hw, contended=True, contention_aware=True,
-                         obs=recorder, **kw)
+                         obs=recorder, lane_split=args.lane_split, **kw)
     blind = run_mesh(solved, hw, contended=True, contention_aware=False, **kw)
     export_trace(args, recorder, contended.report)
+    if contended.lane_info is not None:
+        info = contended.lane_info
+        carve = (
+            f"{info['out_lanes']} out / {info['lanes'] - info['out_lanes']} in"
+            if info["out_lanes"] is not None else "no carve (no evidence)"
+        )
+        print(
+            f"[tune] directional lanes: probe waited "
+            f"in {info['probe_wait_in_s']*1e3:.3f}ms / "
+            f"out {info['probe_wait_out_s']*1e3:.3f}ms -> {carve}"
+        )
     print(
         f"[dist] mean overhead: uncontended {uncontended.mean_overhead()*100:.2f}% | "
         f"shared link {contended.mean_overhead()*100:.2f}% "
@@ -197,6 +213,9 @@ def main(argv=None) -> int:
             "contended": contended.report.as_dict(),
             "contention_blind": blind.report.as_dict(),
             "schedules_changed_by_contention": schedules_differ(uncontended, contended),
+            "lane_split": contended.lane_split,
+            **({"lane_info": contended.lane_info}
+               if contended.lane_info is not None else {}),
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

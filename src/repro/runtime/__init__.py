@@ -19,12 +19,14 @@ the command line and ``benchmarks/bench_runtime.py`` measures it.
 
 from .engine import (
     ChannelPool,
+    FloorGreedyVictim,
     HostLink,
     MemoryRuntime,
     PoolAccountant,
     RuntimeReport,
     Tenant,
     TenantReport,
+    VictimPolicy,
     planned_peak,
     simulate_program,
     simulated_report_dict,
@@ -40,7 +42,9 @@ from .workload import WorkloadItem, parse_arrivals, poisson_workload, synthetic_
 
 __all__ = [
     "ChannelPool",
+    "FloorGreedyVictim",
     "HostLink",
+    "VictimPolicy",
     "MemoryRuntime",
     "PoolAccountant",
     "RuntimeReport",

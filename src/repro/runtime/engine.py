@@ -162,15 +162,43 @@ class HostLink:
     bytes_moved: int = 0
     transfers: int = 0
     blackout_s: float = 0.0
+    # Directional lane carving (``repro.tune.lanes``): ``None`` keeps the
+    # legacy work-conserving shared pool — any transfer grabs any free lane —
+    # bit-identical to the frozen reference.  When set, swap-outs may only
+    # use ``out_lane_ids`` and swap-ins ``in_lane_ids``, so bulk swap-out
+    # traffic can never queue a latency-critical swap-in behind it.
+    out_lane_ids: tuple[int, ...] | None = None
+    in_lane_ids: tuple[int, ...] | None = None
+    # Per-direction contention decomposition: how long transfers of each
+    # direction queued before starting (channel/lane wait plus blackout
+    # shift) and the bytes they moved.  Pure accumulators — they never feed
+    # back into scheduling — read by ``repro.tune.lanes`` probe runs to pick
+    # a directional split; only emitted in reports when a split is active.
+    wait_in_s: float = 0.0
+    wait_out_s: float = 0.0
+    bytes_in: int = 0
+    bytes_out: int = 0
 
     @classmethod
-    def make(cls, total_bw: float, lanes: int) -> "HostLink":
+    def make(cls, total_bw: float, lanes: int,
+             out_lanes: int | None = None) -> "HostLink":
         lanes = max(1, int(lanes))
-        return cls(float(total_bw), lanes, [0.0] * lanes)
+        link = cls(float(total_bw), lanes, [0.0] * lanes)
+        if out_lanes is not None and lanes > 1:
+            out_lanes = max(1, min(int(out_lanes), lanes - 1))
+            link.out_lane_ids = tuple(range(out_lanes))
+            link.in_lane_ids = tuple(range(out_lanes, lanes))
+        return link
 
     @property
     def lane_bw(self) -> float:
         return self.total_bw / self.lanes
+
+    def lane_ids(self, direction: str):
+        """Lanes a transfer of ``direction`` may use (all, when unsplit)."""
+        if self.out_lane_ids is None:
+            return range(self.lanes)
+        return self.out_lane_ids if direction == "out" else self.in_lane_ids
 
     def add_blackout(self, start: float, end: float,
                      prune_before: float | None = None) -> None:
@@ -1007,6 +1035,55 @@ def simulated_report_dict(report: "RuntimeReport") -> dict:
     return d
 
 
+# ----------------------------------------------------------- victim policies
+class VictimPolicy:
+    """Strategy for picking which running tenant a renegotiation shrinks.
+
+    ``choose`` receives the engine, the head-of-line waiter, the bytes its
+    admission still ``needed`` on its device pool, and the eligible victims
+    in floor-greedy order (lowest priority, then largest floor, then name).
+    It returns ``(run, new_limit, decisions, new_floor, solve_ms)`` for the
+    staged re-plan, or ``None`` to fall back to plain FIFO queueing.
+
+    ``deferred=False`` policies run synchronously inside the admission path
+    (the legacy behavior).  ``deferred=True`` policies are invoked at the
+    next event-loop top instead — the only point where the engine state is a
+    consistent between-events snapshot, which simulation-probing policies
+    (``repro.tune.LedgerVictimPolicy``) need to ``resume()`` candidate
+    suffixes.  Deferral costs at most one simulated event of staging delay
+    and never changes what the staged plan can observe (re-plans only apply
+    at the victim's next iteration barrier either way).
+    """
+
+    name = "greedy"
+    deferred = False
+
+    def choose(self, engine: "MemoryRuntime", head: "Tenant", needed: int,
+               victims: "list[_TenantRun]"):
+        raise NotImplementedError
+
+
+class FloorGreedyVictim(VictimPolicy):
+    """The default: first eligible victim, shrunk by exactly ``needed``.
+
+    Byte-for-byte the pre-policy engine loop (and the frozen reference's):
+    walk victims in (priority, -floor, name) order, re-solve at
+    ``floor - needed``, take the first solve whose new floor actually fits
+    the shrunken limit."""
+
+    def choose(self, engine, head, needed, victims):
+        for v in victims:
+            new_limit = v.floor - needed
+            if new_limit <= 0:
+                continue
+            decisions, solve_ms = engine._replan(v.tenant, new_limit)
+            new_floor = planned_peak(v.trace, decisions)
+            if new_floor > new_limit:
+                continue  # solver could not push the floor low enough
+            return v, new_limit, decisions, new_floor, solve_ms
+        return None
+
+
 # ------------------------------------------------------------------- engine
 class MemoryRuntime:
     """Co-schedules N tenant programs over K DMA channels under one budget.
@@ -1043,6 +1120,8 @@ class MemoryRuntime:
         contention_aware: bool = True,
         record_events: bool = True,
         capture_snapshots: bool = False,
+        max_snapshots: int | None = None,
+        victim_policy: VictimPolicy | None = None,
         obs=None,
     ):
         if prefetch not in ("backsched", "eager"):
@@ -1066,6 +1145,20 @@ class MemoryRuntime:
         self.contention_aware = contention_aware
         self.record_events = record_events
         self.capture_snapshots = capture_snapshots
+        # Snapshot ring buffer: with churn storms every applied renegotiation
+        # barrier deep-copies the whole engine, which grows without bound on
+        # long horizons.  ``max_snapshots=N`` keeps only the N most recent —
+        # ``resume()`` then replays suffixes from those barriers only;
+        # earlier barriers are no longer resumable (the full run's report is
+        # unaffected either way).  ``None`` keeps every snapshot.
+        self.max_snapshots = max_snapshots
+        # Victim selection is pluggable: the default reproduces the frozen
+        # reference's floor-greedy loop bit for bit; ``repro.tune`` supplies
+        # a ledger-driven policy that probes candidate (victim, limit) pairs
+        # by re-simulating the suffix.
+        self.victim_policy = (
+            victim_policy if victim_policy is not None else FloorGreedyVictim()
+        )
         # Optional observer (``repro.obs.ObsRecorder`` or anything with its
         # hook surface).  The engine only *calls* it — never reads from it —
         # so simulated reports are bit-identical obs-on vs obs-off; with
@@ -1107,6 +1200,7 @@ class MemoryRuntime:
         self._events = 0
         self.barrier_snapshots: list["MemoryRuntime"] = []
         self._snapshot_due = False
+        self._tune_due = False
 
     # ----------------------------------------------------- device pools
     def acct_for(self, device: str | None) -> PoolAccountant:
@@ -1161,7 +1255,8 @@ class MemoryRuntime:
             return start, end, ch
         ids = chans.out_ids if direction == "out" else chans.in_ids
         ch = min(ids, key=lambda c: chans.free_at[c])
-        lane = min(range(self.link.lanes), key=lambda l: self.link.free_at[l])
+        lane = min(self.link.lane_ids(direction),
+                   key=lambda l: self.link.free_at[l])
         duration = self.xfer_seconds(size)
         queued = max(ready_t, chans.free_at[ch], self.link.free_at[lane])
         start = self.link.next_clear(queued, duration)
@@ -1170,6 +1265,12 @@ class MemoryRuntime:
         self.link.free_at[lane] = end
         self.link.bytes_moved += size
         self.link.transfers += 1
+        if direction == "in":
+            self.link.wait_in_s += start - ready_t
+            self.link.bytes_in += size
+        else:
+            self.link.wait_out_s += start - ready_t
+            self.link.bytes_out += size
         if direction == "in":
             run._in_detail[var] = (duration, queued - ready_t, start - queued)
         if self.obs is not None:
@@ -1246,9 +1347,24 @@ class MemoryRuntime:
         to reclaim).  A victim must have a future iteration barrier — the
         only point a shrunken plan can take effect — and only one staged
         re-plan at a time.  Falls back to FIFO queueing when no single
-        victim can free enough.
+        victim can free enough.  The actual (victim, limit) pick is the
+        ``victim_policy``'s; deferred policies run at the next loop top
+        (see ``VictimPolicy``) instead of inside the admission path.
         """
         if not self.renegotiate or self.budget is None or not self._waiting:
+            return
+        if self.victim_policy.deferred:
+            self._tune_due = True
+            return
+        self._stage_victim()
+
+    def _stage_victim(self) -> None:
+        """Ask the victim policy for a (victim, limit) and stage its re-plan.
+
+        Re-validates the waiting state first: by the time a deferred policy
+        runs, the head may already have been admitted (or departed victims
+        may have freed enough reservation)."""
+        if not self._waiting:
             return
         head = self._waiting[0]
         floor = head.resident_floor()
@@ -1268,21 +1384,16 @@ class MemoryRuntime:
             and r.device == head.device  # only same-pool bytes can help
         ]
         victims.sort(key=lambda r: (r.priority, -r.floor, r.name))
-        for v in victims:
-            new_limit = v.floor - needed
-            if new_limit <= 0:
-                continue
-            decisions, solve_ms = self._replan(v.tenant, new_limit)
-            new_floor = planned_peak(v.trace, decisions)
-            if new_floor > new_limit:
-                continue  # solver could not push the floor low enough
-            v.replan_pending = (list(decisions), new_floor, solve_ms)
-            self._promised[v.device] = (
-                self._promised.get(v.device, 0) + v.floor - new_floor
-            )
-            if self.obs is not None:
-                self.obs.renegotiation("staged", v.name, v.t, new_limit)
+        choice = self.victim_policy.choose(self, head, needed, victims)
+        if choice is None:
             return
+        v, new_limit, decisions, new_floor, solve_ms = choice
+        v.replan_pending = (list(decisions), new_floor, solve_ms)
+        self._promised[v.device] = (
+            self._promised.get(v.device, 0) + v.floor - new_floor
+        )
+        if self.obs is not None:
+            self.obs.renegotiation("staged", v.name, v.t, new_limit)
 
     def _on_barrier(self, run: _TenantRun) -> None:
         """Iteration barrier of a victim with a staged re-plan (called from
@@ -1396,6 +1507,11 @@ class MemoryRuntime:
         so ``resume()`` on the snapshot replays the suffix independently.
         """
         memo: dict[int, object] = {id(self.hw): self.hw}
+        # The policy is config (plus an optional decision log), not simulated
+        # state; prior barrier snapshots are themselves whole engines — both
+        # are shared/elided rather than recursively deep-copied.
+        memo[id(self.victim_policy)] = self.victim_policy
+        memo[id(self.barrier_snapshots)] = []
         if self.replanner is not None:
             memo[id(self.replanner)] = self.replanner
         if self.obs is not None:
@@ -1419,12 +1535,45 @@ class MemoryRuntime:
         snap._snapshot_due = False
         return snap
 
+    def _probe_clone(self) -> "MemoryRuntime":
+        """A what-if copy for candidate probing (``repro.tune``).
+
+        Like ``_snapshot`` but detached from everything a probe must not
+        touch: no observer (the live recorder would otherwise collect the
+        probe's phantom events through the runs' cached ``_obs`` hooks), the
+        *default* victim policy (a simulation-probing policy re-probing
+        inside its own probes would recurse), and no event recording for
+        tenants admitted during the probe.  Each call clones the live
+        engine's pristine state, so sibling candidate probes at the same
+        decision point can never observe each other's staged reservations.
+        """
+        snap = self._snapshot()
+        snap.obs = None
+        for r in snap._running:
+            r._obs = None
+        snap.victim_policy = FloorGreedyVictim()
+        snap._tune_due = False
+        snap.record_events = False
+        return snap
+
     def _loop(self) -> None:
         heap = self._event_heap
         while self._arrivals or self._waiting or self._running:
             if self._snapshot_due:
                 self._snapshot_due = False
                 self.barrier_snapshots.append(self._snapshot())
+                if (self.max_snapshots is not None
+                        and len(self.barrier_snapshots) > self.max_snapshots):
+                    # Ring buffer: drop the oldest barrier.  resume() can
+                    # then only replay suffixes from the newest N barriers.
+                    del self.barrier_snapshots[0]
+            if self._tune_due:
+                # Deferred victim staging: the loop top is a consistent
+                # between-events point (every unfinished running tenant has a
+                # frontier entry), so a probing policy can snapshot + resume
+                # candidate suffixes here.
+                self._tune_due = False
+                self._stage_victim()
             if not self._running:
                 if self._arrivals:
                     # Idle gap: jump the clock to the next arrival.
@@ -1457,6 +1606,29 @@ class MemoryRuntime:
             else:
                 heapq.heappush(heap, (run.t, seq, run))
 
+    def _link_dict(self) -> dict | None:
+        if self.link is None:
+            return None
+        d = {
+            "total_bw": self.link.total_bw,
+            "lanes": self.link.lanes,
+            "lane_bw": self.link.lane_bw,
+            "bytes_moved": self.link.bytes_moved,
+            "transfers": self.link.transfers,
+            "blackout_s": self.link.blackout_s,
+        }
+        if self.link.out_lane_ids is not None:
+            # Extra keys only on directionally-partitioned links: the default
+            # shared-pool report must stay bit-identical to the frozen
+            # reference engine's.
+            d["out_lanes"] = len(self.link.out_lane_ids)
+            d["in_lanes"] = len(self.link.in_lane_ids)
+            d["wait_in_s"] = self.link.wait_in_s
+            d["wait_out_s"] = self.link.wait_out_s
+            d["bytes_in"] = self.link.bytes_in
+            d["bytes_out"] = self.link.bytes_out
+        return d
+
     def _final_report(self, order: list[str], wall_s: float) -> RuntimeReport:
         ordered = [self._reports[n] for n in order if n in self._reports]
         named_devices = sorted(d for d in self._accts if d is not None)
@@ -1485,18 +1657,7 @@ class MemoryRuntime:
                 if named_devices
                 else None
             ),
-            link=(
-                None
-                if self.link is None
-                else {
-                    "total_bw": self.link.total_bw,
-                    "lanes": self.link.lanes,
-                    "lane_bw": self.link.lane_bw,
-                    "bytes_moved": self.link.bytes_moved,
-                    "transfers": self.link.transfers,
-                    "blackout_s": self.link.blackout_s,
-                }
-            ),
+            link=self._link_dict(),
             engine={
                 "events": self._events,
                 "run_wall_s": wall_s,
@@ -1525,6 +1686,7 @@ class MemoryRuntime:
         self._events = 0
         self.barrier_snapshots = []
         self._snapshot_due = False
+        self._tune_due = False
         t0 = time.perf_counter()
         self._loop()
         return self._final_report(self._order, time.perf_counter() - t0)

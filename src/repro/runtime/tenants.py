@@ -121,6 +121,10 @@ class ColocationResult:
     # Budget share each tenant's plan was solved at (largest-remainder
     # proportional split: shares sum to the budget before peak clamping).
     shares: dict[str, int] = field(default_factory=dict)
+    # Which split policy produced ``shares`` ("proportional" | "tuned") and,
+    # for tuned splits, the ``repro.tune`` descent record (as_dict form).
+    budget_split: str = "proportional"
+    split_tuning: dict | None = None
 
     @property
     def sum_isolated_peaks(self) -> int:
@@ -146,6 +150,9 @@ class ColocationResult:
             "sharing_gain": self.sharing_gain,
             "natural_peaks": dict(self.natural_peaks),
             "shares": dict(self.shares),
+            "budget_split": self.budget_split,
+            **({"split_tuning": dict(self.split_tuning)}
+               if self.split_tuning is not None else {}),
             "plan_solve_ms": {n: round(v, 3) for n, v in self.plan_solve_ms.items()},
             "runtime": self.report.as_dict(),
             "isolated": {
@@ -191,12 +198,23 @@ def colocate_programs(
     renegotiate: bool = False,
     record_events: bool = True,
     obs=None,
+    budget_split: str = "proportional",
+    split_evals: int = 24,
+    victim_policy=None,
 ) -> ColocationResult:
     """Co-schedule N solved programs under one shared HBM budget.
 
     The budget defaults to ``budget_frac`` of the sum of isolated peak loads;
     each tenant's swap schedule is solved at its proportional share (clamped
     to its trace peak so an under-committed tenant gets a no-op schedule).
+    ``budget_split="tuned"`` instead coordinate-descends the split with
+    ``repro.tune.tuned_shares`` (up to ``split_evals`` trial colocations),
+    keeping only moves that strictly reduce SLO-weighted total stall; the
+    descent record lands in ``ColocationResult.split_tuning``.
+
+    ``victim_policy`` overrides the engine's renegotiation victim policy
+    (default floor-greedy; ``repro.tune.LedgerVictimPolicy`` scores
+    candidates by simulated marginal ledger).
 
     Churn: ``arrivals``/``priorities``/``departures`` map tenant names to
     their arrival time, SLO weight, and optional open-ended departure event;
@@ -216,36 +234,65 @@ def colocate_programs(
     total = sum(peaks.values())
     if budget is None:
         budget = int(total * budget_frac)
+    if budget_split not in ("proportional", "tuned"):
+        raise ValueError(f"unknown budget_split {budget_split!r}")
     shares = proportional_shares(peaks, budget)
-    tenants = []
-    plan_solve_ms: dict[str, float] = {}
-    for n, p in named_programs.items():
-        share = min(shares[n], peaks[n])
-        t0 = time.perf_counter()
-        tenants.append(
-            tenant_from_program(
-                n, p, hw, share, scorer=scorer,
-                size_threshold=size_threshold, cache=cache, iterations=iterations,
-                arrival_t=arrivals.get(n, 0.0), priority=priorities.get(n, 1.0),
-                departure_t=departures.get(n),
+    replanner = pipeline_replanner(
+        hw, scorer=scorer, size_threshold=size_threshold, cache=cache,
+        programs=named_programs,
+    )
+
+    def build_tenants(shs, solve_ms: "dict[str, float] | None" = None):
+        tenants = []
+        for n, p in named_programs.items():
+            share = min(shs[n], peaks[n])
+            t0 = time.perf_counter()
+            tenants.append(
+                tenant_from_program(
+                    n, p, hw, share, scorer=scorer,
+                    size_threshold=size_threshold, cache=cache,
+                    iterations=iterations,
+                    arrival_t=arrivals.get(n, 0.0),
+                    priority=priorities.get(n, 1.0),
+                    departure_t=departures.get(n),
+                )
             )
-        )
-        plan_solve_ms[n] = (time.perf_counter() - t0) * 1e3
+            if solve_ms is not None:
+                solve_ms[n] = (time.perf_counter() - t0) * 1e3
+        return tenants
+
+    split_tuning = None
+    if budget_split == "tuned":
+        from ..tune import slo_weighted_stall, tuned_shares
+
+        def evaluate(shs):
+            # Trial colocations: no event logs, no observer — only the
+            # simulated report matters, and it is unchanged by either.
+            rt = MemoryRuntime(
+                hw, budget=budget, channels=channels, renegotiate=renegotiate,
+                replanner=replanner, record_events=False,
+                victim_policy=victim_policy,
+            )
+            return slo_weighted_stall(rt.run(build_tenants(shs)))
+
+        tuning = tuned_shares(peaks, budget, evaluate,
+                              start=shares, max_evals=split_evals)
+        shares, split_tuning = tuning.shares, tuning.as_dict()
+
+    plan_solve_ms: dict[str, float] = {}
+    tenants = build_tenants(shares, plan_solve_ms)
     isolated = {
         t.name: simulate_program(t.trace, t.decisions, hw, t.limit, channels=channels)
         for t in tenants
     }
     rt = MemoryRuntime(
         hw, budget=budget, channels=channels, renegotiate=renegotiate,
-        replanner=pipeline_replanner(
-            hw, scorer=scorer, size_threshold=size_threshold, cache=cache,
-            programs=named_programs,
-        ),
-        record_events=record_events,
-        obs=obs,
+        replanner=replanner, record_events=record_events, obs=obs,
+        victim_policy=victim_policy,
     )
     report = rt.run(tenants)
     return ColocationResult(
         report=report, budget=budget, isolated=isolated, natural_peaks=peaks,
         plan_solve_ms=plan_solve_ms, shares=shares,
+        budget_split=budget_split, split_tuning=split_tuning,
     )

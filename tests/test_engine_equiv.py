@@ -205,6 +205,46 @@ def test_mesh_budgeted_bit_for_bit():
     assert canon(frt.report) == canon(rrt.report)
 
 
+def mesh_churn_tenants(mod, newcomer_arrival=0.02, devices=4):
+    """The data=4 contended mesh plus a late newcomer on shard0's device —
+    the shape where renegotiation, collectives, and the shared link all
+    interact in one run."""
+    ts = mesh_tenants(mod, devices)
+    limit, decisions = PLANS["small"]
+    ts.append(
+        mod.Tenant(
+            "late", TEMPLATES["small"], list(decisions), limit=limit,
+            iterations=1, device="d0", arrival_t=newcomer_arrival,
+            priority=2.0,
+        )
+    )
+    return ts
+
+
+@pytest.mark.parametrize("newcomer_arrival", [0.005, 0.02])
+def test_mesh_resume_contended_data4_byte_identical(newcomer_arrival):
+    """resume() coverage on a contended data=4 mesh: a newcomer on d0 forces
+    a renegotiation barrier while all four shards contend on the HostLink
+    (collective blackouts included) — the suffix replay must still be byte
+    identical to the full horizon, and the full horizon to the reference."""
+    budget = FLOORS["medium"] + FLOORS["small"] // 2
+    frt, rrt = run_both(
+        lambda mod: mesh_churn_tenants(mod, newcomer_arrival),
+        budget=budget, renegotiate=True, link=(HW.link_bw, 2),
+    )
+    full = canon(frt.report)
+    assert full == canon(rrt.report)
+    capturing = fast.MemoryRuntime(
+        HW, budget=budget, channels=2, renegotiate=True,
+        replan_size_threshold=SIZE_THRESHOLD, capture_snapshots=True,
+        link=fast.HostLink.make(HW.link_bw, 2))
+    assert canon(capturing.run(mesh_churn_tenants(fast, newcomer_arrival))) == full
+    assert frt.report.renegotiations >= 1, "shape must exercise renegotiation"
+    assert capturing.barrier_snapshots, "no barrier snapshot captured"
+    for snap in capturing.barrier_snapshots:
+        assert canon(snap.resume()) == full
+
+
 # ------------------------------------------------------- engine-only features
 def test_record_events_off_same_simulated_report():
     items = poisson_workload(["small", "medium"], 6, 50.0, seed=9, iterations=(1, 3))

@@ -28,7 +28,7 @@ from pathlib import Path
 BASELINE = Path(__file__).resolve().parent / "enginetime_baseline.json"
 TOLERANCE = 0.25   # fail on >1.25x relative engine-time regression
 NOISE_FLOOR_S = 0.010  # cells still under 10 ms are noise, never a failure
-CELLS = ("churn", "churn_reneg", "churn_obs", "mesh_data4")
+CELLS = ("churn", "churn_reneg", "churn_obs", "mesh_data4", "tune")
 
 
 def measure(repeats: int = 1) -> dict:

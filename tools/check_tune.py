@@ -1,0 +1,89 @@
+"""CI gate for the repro.tune decision surfaces (Issue 8).
+
+Runs ``benchmarks.bench_tune`` in smoke mode in-process and fails the build
+unless the tuned decisions hold their ground against the static defaults:
+
+  * **victim** — the ledger policy's mean newcomer queue wait is
+    equal-or-lower than floor-greedy's at equal-or-lower total added victim
+    overhead, with zero overflow events (the probing must never buy latency
+    with budget violations);
+  * **budget_split** — the coordinate-descent split is never worse than
+    ``proportional_shares`` on any cell (strict wins are asserted by the
+    committed full-run ``BENCH_tune.json``, not re-gated at smoke scale);
+  * **defaults** — with every tuning knob at its default the victim
+    workload's report is bit-identical to the frozen
+    ``runtime/_engine_reference.py`` engine.
+
+The simulator is deterministic, so these are exact comparisons — no
+tolerance, no retry (unlike the wall-time gates in check_enginetime).
+
+    PYTHONPATH=src python -m tools.check_tune
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main(argv=None) -> int:
+    from benchmarks.bench_tune import (
+        budget_split_cells,
+        build_victim_workload,
+        defaults_identity,
+        victim_cell,
+    )
+
+    failures = []
+    workload = build_victim_workload(smoke=True, seed=42)
+
+    victim = victim_cell(workload)
+    g, l = victim["greedy"], victim["ledger"]
+    if l["newcomer_mean_wait_s"] > g["newcomer_mean_wait_s"]:
+        failures.append(
+            f"victim: ledger mean wait {l['newcomer_mean_wait_s']*1e3:.2f}ms "
+            f"> greedy {g['newcomer_mean_wait_s']*1e3:.2f}ms"
+        )
+    ledger_added = sum(victim["ledger_added_victim_overhead"].values())
+    greedy_added = sum(victim["greedy_added_victim_overhead"].values())
+    if ledger_added > greedy_added + 1e-12:
+        failures.append(
+            f"victim: ledger added overhead {ledger_added*100:.2f}pp "
+            f"> greedy {greedy_added*100:.2f}pp"
+        )
+    if l["overflow_events"] != 0:
+        failures.append(f"victim: {l['overflow_events']} overflow events under ledger")
+    print(
+        f"ok victim: ledger {l['newcomer_mean_wait_s']*1e3:.2f}ms vs greedy "
+        f"{g['newcomer_mean_wait_s']*1e3:.2f}ms mean wait "
+        f"(added overhead {ledger_added*100:.2f}pp vs {greedy_added*100:.2f}pp, "
+        f"{victim['ledger_probes']} probes)"
+    )
+
+    split = budget_split_cells(smoke=True)
+    for name, cell in split["cells"].items():
+        if not cell["not_worse"]:
+            failures.append(
+                f"split[{name}]: tuned stall {cell['tuned_stall_s']*1e3:.3f}ms "
+                f"> proportional {cell['proportional_stall_s']*1e3:.3f}ms"
+            )
+        if not cell["all_completed"]:
+            failures.append(f"split[{name}]: tuned run left tenants incomplete")
+        print(
+            f"ok split[{name}]: proportional {cell['proportional_stall_s']*1e3:.3f}ms "
+            f"-> tuned {cell['tuned_stall_s']*1e3:.3f}ms"
+        )
+
+    identity = defaults_identity(workload)
+    if not identity["bit_for_bit_equal"]:
+        failures.append("defaults: report diverged from runtime/_engine_reference.py")
+    else:
+        print("ok defaults: bit-identical to the frozen reference engine")
+
+    if failures:
+        print("\n".join("FAIL " + f for f in failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,6 +45,15 @@ echo "== churn smoke benchmark: renegotiation vs FIFO queueing =="
 python -m benchmarks.bench_churn --smoke --out "${TMPDIR:-/tmp}/BENCH_churn_smoke.json" \
   || { echo "FAIL churn bench"; status=1; }
 
+echo "== tune smoke gate: ledger victim policy + SLO-equalized splits =="
+# Re-runs the bench_tune smoke cells in-process and fails unless the ledger
+# victim policy's mean newcomer wait is equal-or-lower than floor-greedy's
+# at equal-or-lower added victim overhead (zero overflow), tuned budget
+# splits are never worse than proportional, and the all-defaults report
+# stays bit-identical to runtime/_engine_reference.py.  Committed
+# BENCH_tune.json is the full run.
+python -m tools.check_tune || { echo "FAIL tune gate"; status=1; }
+
 echo "== obs trace export smoke + trace validation =="
 # Regenerates both example traces into a temp dir, then validates the fresh
 # and the committed copies with tools/check_trace.py: well-formed Chrome
