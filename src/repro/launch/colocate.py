@@ -277,6 +277,11 @@ def main(argv=None):
                 f"{d['binding_constraint']}"
             )
     export_trace(args, recorder, result.report)
+    if args.verify:
+        from repro.analyze import verify_launch
+
+        verify_launch(args, programs=programs, recorder=recorder,
+                      report=result.report)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result.as_dict(), f, indent=2, sort_keys=True)

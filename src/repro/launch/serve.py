@@ -158,6 +158,11 @@ def main(argv=None):
             )
             print_colocation(result)
             export_trace(args, recorder, result.report)
+            if args.verify:
+                from repro.analyze import verify_launch
+
+                verify_launch(args, programs=programs, recorder=recorder,
+                              report=result.report)
     key = jax.random.PRNGKey(args.seed + 1)
     spec = serve_batch_struct(cfg, B, P)
     batch = {"tokens": jax.random.randint(key, spec["tokens"].shape, 0, cfg.vocab_size, jnp.int32)}

@@ -177,6 +177,11 @@ def main(argv=None) -> int:
                          obs=recorder, lane_split=args.lane_split, **kw)
     blind = run_mesh(solved, hw, contended=True, contention_aware=False, **kw)
     export_trace(args, recorder, contended.report)
+    if args.verify:
+        from repro.analyze import verify_launch
+
+        verify_launch(args, programs=solved.programs, recorder=recorder,
+                      report=contended.report)
     if contended.lane_info is not None:
         info = contended.lane_info
         carve = (

@@ -124,7 +124,7 @@ def main(argv=None):
                 f"{len(capture.groups[g].collectives)} collectives, "
                 f"solved in {solved.solve_ms[g]:.1f} ms{src}"
             )
-        if args.trace_out:
+        if args.trace_out or args.verify:
             # Observability run: execute the solved mesh plans through the
             # runtime (contended shared link, the headline configuration)
             # and export the Perfetto trace before training proper starts.
@@ -153,6 +153,11 @@ def main(argv=None):
                 f"{mesh_run.mean_overhead()*100:.2f}%"
             )
             export_trace(args, recorder, mesh_run.report)
+            if args.verify:
+                from repro.analyze import verify_launch
+
+                verify_launch(args, programs=solved.programs,
+                              recorder=recorder, report=mesh_run.report)
 
     remat_policy = None
     if args.plan or args.plan_cache or args.hbm_limit_gb is not None:

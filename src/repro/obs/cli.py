@@ -29,11 +29,20 @@ def add_obs_args(ap: argparse.ArgumentParser, default_record: bool = True) -> No
         "--trace-out", default=None, metavar="PATH",
         help="write a Perfetto-loadable .trace.json of the runtime here",
     )
+    ap.add_argument(
+        "--verify", action="store_true",
+        help="statically verify the run: sweep the solved plans "
+             "(repro.analyze.plan_check) and the recorded schedule "
+             "(repro.analyze.schedule_check); exit nonzero on any violation",
+    )
 
 
 def recorder_for(args):
-    """An ObsRecorder when ``--trace-out`` was given, else None."""
-    if getattr(args, "trace_out", None):
+    """An ObsRecorder when ``--trace-out`` or ``--verify`` was given, else
+    None.  ``--verify`` attaches one even without an output path: the
+    recorder is a pure observer (reports stay bit-identical) and its streams
+    are the race detector's richest input."""
+    if getattr(args, "trace_out", None) or getattr(args, "verify", False):
         from .recorder import ObsRecorder
 
         return ObsRecorder()

@@ -108,6 +108,7 @@ def _summary_to_json(s: SwapSummary) -> dict:
         "per_name_bytes": dict(sorted(s.per_name_bytes.items())),
         "size_threshold": s.size_threshold,
         "hardware": s.hardware,
+        "planned_floor": s.planned_floor,
     }
 
 
@@ -126,6 +127,7 @@ def _summary_from_json(d: dict) -> SwapSummary:
         per_name_bytes=dict(d["per_name_bytes"]),
         size_threshold=d["size_threshold"],
         hardware=d["hardware"],
+        planned_floor=d.get("planned_floor"),
     )
 
 
@@ -149,7 +151,7 @@ def _offload_from_json(d: dict) -> OffloadPlan:
 
 def program_to_json(program: MemoryProgram) -> dict:
     trace = program.require_trace()
-    return {
+    payload = {
         "version": PLAN_FORMAT_VERSION,
         "key": (
             {
@@ -174,6 +176,12 @@ def program_to_json(program: MemoryProgram) -> dict:
         # process state, not plan identity.
         "solve_ms": {k: round(v, 3) for k, v in sorted(program.solve_ms.items())},
     }
+    # Verification provenance (repro.analyze certificate).  Like solve_ms,
+    # stripped from the canonical bytes: a certificate describes the plan,
+    # it is not part of the plan.
+    if program.certificate is not None:
+        payload["certificate"] = program.certificate
+    return payload
 
 
 def program_from_json(d: dict) -> MemoryProgram:
@@ -189,6 +197,7 @@ def program_from_json(d: dict) -> MemoryProgram:
     program.swap_summaries = {k: _summary_from_json(s) for k, s in d["swap_summaries"].items()}
     program.offload_plans = {k: _offload_from_json(p) for k, p in d["offload_plans"].items()}
     program.solve_ms = {k: float(v) for k, v in d.get("solve_ms", {}).items()}
+    program.certificate = d.get("certificate")
     return program
 
 
@@ -199,6 +208,7 @@ def dumps_canonical(program: MemoryProgram) -> str:
     solved at different speeds."""
     payload = program_to_json(program)
     payload.pop("solve_ms", None)
+    payload.pop("certificate", None)
     return json.dumps(payload, sort_keys=True, separators=(",", ":"))
 
 
@@ -210,7 +220,11 @@ class PlanCache:
     mtime — a hit touches the file) are evicted until the directory fits.
     A schema-version mismatch is an expected upgrade-path event and degrades
     to a silent cache miss (the caller re-solves and overwrites); corrupt
-    artifacts additionally warn.
+    artifacts additionally warn.  Every load re-derives the static
+    verification certificate (``repro.analyze``) over the restored plan —
+    an artifact whose invariants no longer prove out (bit-rot, hand edits,
+    a stale solver bug) is demoted to a miss and counted in
+    ``certificate_misses`` rather than admitted to the runtime.
     """
 
     def __init__(self, root: "str | Path", max_bytes: int | None = None):
@@ -218,6 +232,7 @@ class PlanCache:
         self.root.mkdir(parents=True, exist_ok=True)
         self.max_bytes = max_bytes
         self.version_misses = 0
+        self.certificate_misses = 0
 
     def path_for(self, key: PlanKey) -> Path:
         return self.root / f"{key.cache_name()}.json"
@@ -245,6 +260,21 @@ class PlanCache:
             return None
         program.key = key
         program.from_cache = True
+        # Re-prove the invariants on the restored bytes; never trust the
+        # stored verdict.  A failing plan is a miss — the caller re-solves.
+        from ..analyze.plan_check import verify_program
+
+        cert = verify_program(program)
+        if not cert.ok:
+            self.certificate_misses += 1
+            import warnings
+
+            warnings.warn(
+                f"plan artifact {path} failed re-verification "
+                f"({', '.join(cert.failed())}); treating as a cache miss"
+            )
+            return None
+        program.certificate = cert.to_dict()
         # LRU touch: a hit keeps the artifact at the back of the evict queue.
         try:
             os.utime(path)

@@ -231,6 +231,8 @@ class SwapSelection:
         for d in decisions:
             nm = by_id[d.var].name or "?"
             per_name[nm] = per_name.get(nm, 0) + d.size
+        from ..analyze.plan_check import resident_floor
+
         program.swap_summaries[k] = SwapSummary(
             scorer=self.scorer,
             limit=self.limit,
@@ -242,6 +244,7 @@ class SwapSelection:
             per_name_bytes=per_name,
             size_threshold=ctx.size_threshold,
             hardware=ctx.hw.name,
+            planned_floor=resident_floor(program.require_trace(), decisions)[0],
         )
         program.dirty = True
         return program
@@ -301,13 +304,27 @@ class OffloadLowering:
 # ------------------------------------------------------------------ back-end
 @dataclass
 class ArtifactSave:
-    """Persist the program when it gained results and a cache is configured."""
+    """Persist the program when it gained results and a cache is configured.
+
+    Before writing, the solved plan is swept by the static verifier and the
+    resulting certificate embedded in the artifact (outside the canonical
+    plan-identity bytes).  The artifact is stored either way — a failing
+    certificate is surfaced as a note here and demoted to a cache miss on
+    every future ``PlanCache.load``."""
 
     name: str = "ArtifactSave"
 
     def run(self, program: MemoryProgram | None, ctx: PassContext) -> MemoryProgram:
         assert program is not None
         if ctx.cache is not None and program.key is not None and program.dirty:
+            from ..analyze.plan_check import verify_program
+
+            cert = verify_program(program)
+            program.certificate = cert.to_dict()
+            if not cert.ok:
+                ctx.note(
+                    f"[plan] certificate FAILED: {', '.join(cert.failed())}"
+                )
             path = ctx.cache.store(program)
             program.dirty = False
             ctx.note(f"[plan] saved artifact {path}")

@@ -93,6 +93,13 @@ class SwapSummary:
     # (re-solve).  Cross-process reuse is already hw-safe via PlanKey.
     size_threshold: int = 0
     hardware: str = ""
+    # The resident floor (load curve minus absence windows) the solver
+    # committed to — the runtime's admission reservation (planned_peak).
+    # Greedy selection is best-effort, so the floor may legitimately exceed
+    # ``limit``; the static verifier (repro.analyze) proves the decisions
+    # reproduce exactly this claim, which catches any dropped or tampered
+    # decision.  None on hand-built or legacy summaries (pre-floor format).
+    planned_floor: int | None = None
 
     @property
     def selected_bytes(self) -> int:
@@ -120,6 +127,11 @@ class MemoryProgram:
     # Excluded from the canonical plan bytes (timing is not plan identity),
     # so two solves of the same instance still compare byte-equal.
     solve_ms: dict[str, float] = field(default_factory=dict)
+    # Static-verification certificate (repro.analyze Certificate.to_dict()),
+    # stamped by ArtifactSave and re-derived on every cache load.  Like
+    # solve_ms it is provenance, not identity: excluded from the canonical
+    # plan bytes so stamping a certificate never changes plan equality.
+    certificate: dict | None = None
     from_cache: bool = False          # True when restored by plan/artifact.py
     dirty: bool = False               # True when a pass added new results
     _swap_planner: AutoSwapPlanner | None = field(default=None, repr=False)

@@ -311,3 +311,56 @@ def test_cache_miss_without_step_fn_raises(tmp_path):
 def test_cache_requires_key(tmp_path):
     with pytest.raises(ValueError):
         MemoryPlanner(lambda x: x, cache=PlanCache(tmp_path))
+
+
+# --------------------------------------------- verification certificates
+def test_artifact_save_stamps_certificate(tmp_path):
+    from repro.plan import ArtifactSave
+
+    cache = PlanCache(tmp_path)
+    prog = solved_program(PlanKey("synthetic", "cert", HW.name))
+    ArtifactSave().run(prog, PassContext(hw=HW, cache=cache))
+    assert prog.certificate is not None
+    assert all(c["violations"] == [] for c in prog.certificate["checks"].values())
+    payload = json.loads(cache.path_for(prog.key).read_text())
+    assert payload["certificate"] == prog.certificate
+
+
+def test_certificate_excluded_from_plan_identity():
+    from repro.analyze import verify_program
+
+    prog = solved_program(PlanKey("synthetic", "cert-id", HW.name))
+    blob = dumps_canonical(prog)
+    prog.certificate = verify_program(prog).to_dict()
+    assert dumps_canonical(prog) == blob, "certificate must be provenance, not identity"
+
+
+def test_cache_load_reverifies_and_stamps(tmp_path):
+    cache = PlanCache(tmp_path)
+    key = PlanKey("synthetic", "cert-load", HW.name)
+    cache.store(solved_program(key))
+    restored = cache.load(key)
+    assert restored is not None and restored.from_cache
+    assert restored.certificate is not None
+    assert all(c["violations"] == [] for c in restored.certificate["checks"].values())
+    assert cache.certificate_misses == 0
+
+
+def test_cache_demotes_artifact_failing_reverification(tmp_path):
+    import warnings
+
+    cache = PlanCache(tmp_path)
+    key = PlanKey("synthetic", "cert-bad", HW.name)
+    path = cache.store(solved_program(key))
+    # Tamper with the stored bytes: drop every swap decision while keeping
+    # the committed planned_floor — the re-proved floor no longer matches.
+    payload = json.loads(path.read_text())
+    assert payload["swap_summaries"]
+    for s in payload["swap_summaries"].values():
+        s["decisions"] = []
+    path.write_text(json.dumps(payload, sort_keys=True, separators=(",", ":")))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert cache.load(key) is None, "a failing certificate is a cache miss"
+    assert any("failed re-verification" in str(w.message) for w in caught)
+    assert cache.certificate_misses == 1

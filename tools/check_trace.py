@@ -14,8 +14,14 @@ Checks, per file:
      overhead: for every completed tenant, the cause buckets (everything
      except the informational keys) add up to ``overhead_s``.
 
+With ``--invariants``, each trace is additionally swept by the event-log
+race detector (``repro.analyze.schedule_check``): channel/lane transfer
+exclusivity, blackout exclusion, accountant monotonicity, reservation
+isolation and ledger closure — so committed traces are certified, not just
+well-formed.
+
 Usage:
-  python tools/check_trace.py TRACE [TRACE ...]
+  python tools/check_trace.py [--invariants] TRACE [TRACE ...]
 
 Exit 0 when every file passes; prints one line per failure otherwise.
 """
@@ -23,6 +29,7 @@ from __future__ import annotations
 
 import json
 import sys
+from pathlib import Path
 
 EXPECT_SCHEMA = 1
 KNOWN_PHASES = {"X", "B", "E", "i", "I", "C", "M", "s", "t", "f"}
@@ -143,14 +150,35 @@ def check_trace(path: str) -> list[str]:
     return errors
 
 
+def check_invariants(path: str) -> list[str]:
+    """Race-detector sweep (repro.analyze) over one trace file."""
+    try:
+        from repro.analyze import verify_trace_file
+    except ImportError:  # direct invocation without PYTHONPATH=src
+        sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+        from repro.analyze import verify_trace_file
+
+    cert = verify_trace_file(path)
+    return [
+        f"{path}: invariant {v['invariant']} [{v['subject']}]: {v['message']}"
+        for v in cert.violations()
+    ]
+
+
 def main(argv=None) -> int:
-    paths = (argv if argv is not None else sys.argv[1:]) or []
+    paths = list(argv if argv is not None else sys.argv[1:])
+    invariants = "--invariants" in paths
+    if invariants:
+        paths.remove("--invariants")
     if not paths:
-        print("usage: check_trace.py TRACE [TRACE ...]", file=sys.stderr)
+        print("usage: check_trace.py [--invariants] TRACE [TRACE ...]",
+              file=sys.stderr)
         return 2
     failures = 0
     for path in paths:
         errs = check_trace(path)
+        if invariants and not errs:
+            errs = check_invariants(path)
         if errs:
             failures += 1
             for e in errs:
@@ -158,7 +186,9 @@ def main(argv=None) -> int:
         else:
             with open(path) as f:
                 n = len(json.load(f)["traceEvents"])
-            print(f"ok   {path}: {n} events, tracks and ledgers consistent")
+            certified = ", schedule invariants hold" if invariants else ""
+            print(f"ok   {path}: {n} events, tracks and ledgers "
+                  f"consistent{certified}")
     return 1 if failures else 0
 
 

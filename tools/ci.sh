@@ -8,6 +8,14 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 status=0
 
+echo "== hygiene: no tracked bytecode =="
+# Stale .pyc files must never land in the tree; the patterns are ignored,
+# so anything tracked means a force-add slipped through.
+tracked_pyc=$(git ls-files | grep -E '(\.pyc$|__pycache__/)' || true)
+if [ -n "$tracked_pyc" ]; then
+  echo "FAIL tracked bytecode:"; echo "$tracked_pyc"; status=1
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q || { echo "FAIL tier-1"; status=1; }
 
@@ -60,9 +68,23 @@ echo "== obs trace export smoke + trace validation =="
 # trace events, non-overlapping slices per track, paired flow arrows, and a
 # stall-attribution ledger that sums exactly to each tenant's overhead.
 python tools/export_example_traces.py --out-dir "${TMPDIR:-/tmp}/repro_traces" \
-  && python tools/check_trace.py "${TMPDIR:-/tmp}/repro_traces"/*.trace.json \
-  && python tools/check_trace.py examples/traces/*.trace.json \
+  && python tools/check_trace.py --invariants "${TMPDIR:-/tmp}/repro_traces"/*.trace.json \
+  && python tools/check_trace.py --invariants examples/traces/*.trace.json \
   || { echo "FAIL trace export"; status=1; }
+
+echo "== static analysis: determinism lint + certified --verify smokes =="
+# lint_determinism is stdlib-only (no repro import, no jax) so it gates even
+# where the backend is unavailable; the --verify smokes run the colocate and
+# shardplan launchers with the static plan verifier + event-log race
+# detector armed (repro.analyze), failing on any invariant violation.
+python tools/lint_determinism.py || { echo "FAIL determinism lint"; status=1; }
+python -m repro.launch.analyze -q examples/traces/*.trace.json \
+  || { echo "FAIL trace certification"; status=1; }
+python -m repro.launch.colocate --arch qwen3-4b --smoke --tenants prefill,decode \
+    --renegotiate --iterations 2 --verify >/dev/null \
+  || { echo "FAIL colocate --verify"; status=1; }
+python -m repro.launch.shardplan --arch qwen3-4b --smoke --mesh data=4 --verify >/dev/null \
+  || { echo "FAIL shardplan --verify"; status=1; }
 
 echo "== dist smoke benchmark: per-shard plans + host-link contention gates =="
 # Exits non-zero unless the per-device planned peak stays within the shard

@@ -1,0 +1,198 @@
+#!/usr/bin/env python
+"""Determinism lint: AST pass over the bit-for-bit reference-pinned modules.
+
+The fast solver/engine implementations are pinned byte-identical to frozen
+references (``core/_solver_reference.py``, ``runtime/_engine_reference.py``,
+``tests/test_*_equiv*``).  The bug classes that silently break such pins are
+exactly the order-nondeterminism ones — results that depend on ``set``
+iteration order, which varies with PYTHONHASHSEED for str/bytes-keyed sets:
+
+  iter-unordered       iterating a set in a ``for`` loop or comprehension
+                       (remedy: ``sorted(...)`` the set first)
+  minmax-tie-unordered ``min``/``max`` with a ``key=`` over a set — equal
+                       keys tie-break by iteration order (remedy: sort, or
+                       fold the tiebreak into the key)
+  float-sum-unordered  ``sum``/``math.fsum`` over a set — float addition is
+                       not associative, so accumulation order changes the
+                       result bit pattern
+  set-pop              ``set.pop()`` returns an arbitrary element
+
+Membership tests, ``len``, ``add``/``discard`` and set algebra are fine and
+not flagged; ``sorted(<set>)`` is the approved laundering point.
+
+Set-typedness is inferred per scope: set literals, set comprehensions,
+``set()``/``frozenset()`` calls, set algebra over those, annotations, and
+names assigned any of the above (a name ever rebound to a non-set value in
+the same scope drops out — the lint prefers silence to false positives).
+
+Stdlib-only on purpose: this gate runs where the jax backend (and the repo
+package itself) cannot import.
+
+Usage:
+  python tools/lint_determinism.py [FILE ...]   # default: the pinned modules
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# The reference-pinned modules every PR must keep deterministic.
+DEFAULT_FILES = [
+    "src/repro/runtime/engine.py",
+    "src/repro/core/smartpool.py",
+    "src/repro/core/autoswap.py",
+    "src/repro/tune/victim.py",
+]
+
+SET_BUILTINS = {"set", "frozenset"}
+SET_METHODS = {"union", "intersection", "difference", "symmetric_difference", "copy"}
+SET_ANNOTATIONS = {"set", "frozenset", "Set", "FrozenSet", "MutableSet", "AbstractSet"}
+
+
+def _annotation_is_set(node) -> bool:
+    """``x: set``, ``x: set[int]``, ``x: typing.Set[int]`` …"""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        return node.attr in SET_ANNOTATIONS
+    return isinstance(node, ast.Name) and node.id in SET_ANNOTATIONS
+
+
+class Scope:
+    """Set-typed name inference for one function (or module) body."""
+
+    def __init__(self, body):
+        self.set_names: set[str] = set()
+        dropped: set[str] = set()
+        for stmt in ast.walk(ast.Module(body=list(body), type_ignores=[])):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue  # nested scopes are linted separately
+            targets: list = []
+            value = None
+            if isinstance(stmt, ast.Assign):
+                targets, value = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+                if _annotation_is_set(stmt.annotation):
+                    self.set_names.add(stmt.target.id)
+                    continue
+                targets, value = [stmt.target], stmt.value
+            elif isinstance(stmt, ast.AugAssign):
+                continue  # |=/&= keeps the existing inference
+            for t in targets:
+                if not isinstance(t, ast.Name):
+                    continue
+                if value is not None and self.is_set_expr(value):
+                    self.set_names.add(t.id)
+                else:
+                    dropped.add(t.id)
+        # A name both set- and non-set-assigned is ambiguous: stay silent.
+        self.set_names -= dropped
+
+    def is_set_expr(self, node) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.set_names
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            return self.is_set_expr(node.left) or self.is_set_expr(node.right)
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in SET_BUILTINS:
+                return True
+            if isinstance(f, ast.Attribute) and f.attr in SET_METHODS:
+                return self.is_set_expr(f.value)
+        return False
+
+
+class Linter(ast.NodeVisitor):
+    def __init__(self, path: str, tree: ast.AST):
+        self.path = path
+        self.findings: list[tuple[int, str, str]] = []
+        self._walk_scope(tree.body)
+
+    def flag(self, node, rule: str, msg: str) -> None:
+        self.findings.append((node.lineno, rule, msg))
+
+    def _walk_scope(self, body) -> None:
+        self.scope = Scope(body)
+        for stmt in body:
+            self._visit_stmts(stmt)
+
+    def _visit_stmts(self, node) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            outer = self.scope
+            self._walk_scope(node.body)
+            self.scope = outer
+            return
+        if isinstance(node, ast.ClassDef):
+            outer = self.scope
+            self._walk_scope(node.body)
+            self.scope = outer
+            return
+        self._check(node)
+        for child in ast.iter_child_nodes(node):
+            self._visit_stmts(child)
+
+    def _check(self, node) -> None:
+        scope = self.scope
+        if isinstance(node, (ast.For, ast.AsyncFor)) and scope.is_set_expr(node.iter):
+            self.flag(node, "iter-unordered",
+                      "for-loop over a set: iteration order is "
+                      "hash-dependent; iterate sorted(...) instead")
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+            for gen in node.generators:
+                if scope.is_set_expr(gen.iter):
+                    self.flag(node, "iter-unordered",
+                              "comprehension over a set: iteration order is "
+                              "hash-dependent; iterate sorted(...) instead")
+        if isinstance(node, ast.Call):
+            f = node.func
+            fname = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            first_is_set = bool(node.args) and scope.is_set_expr(node.args[0])
+            if fname in ("min", "max") and first_is_set and any(
+                    kw.arg == "key" for kw in node.keywords):
+                self.flag(node, "minmax-tie-unordered",
+                          f"{fname}(key=...) over a set: equal keys "
+                          "tie-break by hash-dependent iteration order")
+            if fname in ("sum", "fsum") and first_is_set:
+                self.flag(node, "float-sum-unordered",
+                          f"{fname}() over a set: float accumulation order "
+                          "is hash-dependent")
+            if (isinstance(f, ast.Attribute) and f.attr == "pop"
+                    and not node.args and scope.is_set_expr(f.value)):
+                self.flag(node, "set-pop",
+                          "set.pop() returns an arbitrary element")
+
+
+def lint_file(path: Path) -> list[str]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except (OSError, SyntaxError) as e:
+        return [f"{path}: unparseable: {e}"]
+    linter = Linter(str(path), tree)
+    return [
+        f"{path}:{line}: [{rule}] {msg}"
+        for line, rule, msg in sorted(linter.findings)
+    ]
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    paths = [Path(a) for a in args] or [REPO / f for f in DEFAULT_FILES]
+    findings: list[str] = []
+    for p in paths:
+        findings.extend(lint_file(p))
+    for f in findings:
+        print(f"FAIL {f}")
+    if not findings:
+        print(f"ok   determinism lint: {len(paths)} file(s) clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
