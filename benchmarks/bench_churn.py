@@ -31,12 +31,15 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+from bisect import bisect_left, bisect_right
 
 from benchmarks.common import write_bench_json
 from repro.core._solver_reference import reference_simulate_swap_schedule
 from repro.core.autoswap import AutoSwapPlanner
 from repro.core.simulator import GTX_1080TI
+from repro.obs import MonitoredRecorder, priority_class
 from repro.runtime import (
     MemoryRuntime,
     Tenant,
@@ -45,6 +48,7 @@ from repro.runtime import (
     simulate_program,
     synthetic_train_trace,
 )
+from repro.runtime.engine import simulated_report_dict
 
 HW = GTX_1080TI
 SIZE_THRESHOLD = 1 << 20
@@ -126,6 +130,116 @@ def run_policy(templates, plans, items, base_iters, budget, renegotiate: bool):
     }
 
 
+SLO_QUANTILES = (0.50, 0.95, 0.99)
+SLO_PRIORITIES = (0.5, 1.0, 2.0)
+SLO_SKETCH_BUFFER = 128  # small enough that the full cell actually compacts
+
+# The guard SLO sits far above any achievable wait: a single alert from it
+# is a false alarm and fails the cell.  The tight SLO sits below every
+# nonzero wait at storm concurrency, proving the detector does fire.
+SLO_GUARD = "queue_wait.p99<10,name=guard"
+SLO_TIGHT = "queue_wait.p99<1e-6,short=0.005,long=0.02,min=4,name=tight"
+
+
+def slo_cell(smoke: bool, seed: int) -> dict:
+    """SLO-percentile cell: a >=1000-arrival Poisson storm with the
+    streaming monitor armed.  Validates (a) per-priority-class p50/p95/p99
+    queue waits from the quantile sketch against exact post-hoc
+    percentiles within the sketch's self-reported rank-error bound,
+    (b) monitor purity — the simulated report is bit-identical with the
+    monitor armed — and (c) a clean alert track: the generous guard SLO
+    never fires (zero false alarms) while the tight one does."""
+    if smoke:
+        layers = {"base": 10, "small": 4, "medium": 6}
+        n, rate_hz, conc = 150, 20_000.0, 20
+    else:
+        layers = {"base": 14, "small": 6, "medium": 10}
+        n, rate_hz, conc = 1000, 100_000.0, 60
+    templates = {nm: synthetic_train_trace(ly) for nm, ly in layers.items()}
+    plans = {nm: solve_template(tr) for nm, tr in templates.items()}
+    floors = {nm: p[2] for nm, p in plans.items()}
+    items = poisson_workload(
+        ["small", "medium"], n, rate_hz, seed=seed, iterations=(1, 2),
+        priorities=SLO_PRIORITIES,
+    )
+    mean_floor = sum(floors.values()) / len(floors)
+    budget = int(mean_floor * conc)  # overloaded: real queueing, real tails
+
+    def run(obs):
+        rt = MemoryRuntime(HW, budget=budget, channels=2, obs=obs,
+                           record_events=False)
+        return rt.run(make_tenants(templates, plans, items, base_iters=6))
+
+    plain = run(None)
+    recorder = MonitoredRecorder(slos=(SLO_GUARD, SLO_TIGHT),
+                                 sketch_buffer=SLO_SKETCH_BUFFER)
+    monitored = run(recorder)
+    pure = (json.dumps(simulated_report_dict(plain), sort_keys=True)
+            == json.dumps(simulated_report_dict(monitored), sort_keys=True))
+
+    # Exact post-hoc waits per priority class, straight from the report.
+    exact: dict[str, list] = {}
+    for t in monitored.tenants:
+        if t.status == "unschedulable":
+            continue
+        exact.setdefault(priority_class(t.priority), []).append(t.queue_wait_s)
+    for waits in exact.values():
+        waits.sort()
+
+    classes = {}
+    all_within = True
+    for cls in sorted(exact):
+        waits = exact[cls]
+        sk = recorder.monitor.sketches.get(f"queue_wait.{cls}")
+        entry = {"count": len(waits), "sketch_count": 0 if sk is None else sk.count,
+                 "rank_error_bound": 0 if sk is None else sk.rank_error_bound()}
+        for q in SLO_QUANTILES:
+            key = f"p{format(q * 100, 'g')}"
+            target = round(q * (len(waits) - 1))
+            ev = waits[target]
+            sv = None if sk is None else sk.quantile(q)
+            entry[key] = {"sketch": sv, "exact": ev}
+            if sv is None or sk.count != len(waits):
+                within = False
+            else:
+                # Rank distance from the target to the sketch value's rank
+                # interval in the exact order statistics (+1 discretization).
+                lo, hi = bisect_left(waits, sv), bisect_right(waits, sv) - 1
+                err = 0 if lo <= target <= hi else min(
+                    abs(target - lo), abs(target - hi))
+                entry[key]["rank_error"] = err
+                within = err <= sk.rank_error_bound() + 1
+            entry[key]["within_bound"] = within
+            all_within = all_within and within
+        classes[cls] = entry
+
+    alerts = [a.as_dict() for a in recorder.alerts]
+    guard_alerts = [a for a in alerts if a["slo"] == "guard"]
+    tight_alerts = [a for a in alerts if a["slo"] == "tight"]
+    ts_sorted = all(alerts[i]["t"] <= alerts[i + 1]["t"]
+                    for i in range(len(alerts) - 1))
+
+    summary = recorder.finalize()
+    return {
+        "arrivals": n,
+        "rate_hz": rate_hz,
+        "budget": budget,
+        "sketch_buffer": SLO_SKETCH_BUFFER,
+        "slos": summary["slos"],
+        "classes": classes,
+        "quantiles": summary["quantiles"],
+        "alerts": {"guard": len(guard_alerts), "tight": len(tight_alerts),
+                   "total": len(alerts), "ts_sorted": ts_sorted},
+        "acceptance": {
+            "monitor_pure": pure,
+            "sketch_within_bounds": all_within,
+            "zero_false_alarms": not guard_alerts,
+            "tight_slo_fires": bool(tight_alerts),
+            "alerts_ts_sorted": ts_sorted,
+        },
+    }
+
+
 def reference_check(templates, plans) -> dict:
     """The engine's 1-tenant/2-channel/eager path vs the frozen simulator."""
     diffs = []
@@ -151,6 +265,7 @@ def main(argv=None) -> int:
     _, fifo = run_policy(templates, plans, items, base_iters, budget, renegotiate=False)
     reneg_rep, reneg = run_policy(templates, plans, items, base_iters, budget, renegotiate=True)
     ref = reference_check(templates, plans)
+    slo = slo_cell(args.smoke, args.seed)
 
     fifo_oh = {t["name"]: t["overhead"] for t in fifo["tenants"]}
     added_overhead = max(
@@ -176,11 +291,13 @@ def main(argv=None) -> int:
         "renegotiate": reneg,
         "added_victim_overhead": added_overhead,
         "reference_check": ref,
+        "slo": slo,
         "acceptance": {
             "renegotiation_reduces_queue_wait": ok_wait,
             "zero_overflow_events": ok_overflow,
             "victim_overhead_bounded": ok_victim,
             "single_tenant_matches_reference": ok_ref,
+            **{f"slo_{k}": v for k, v in slo["acceptance"].items()},
         },
     }
     write_bench_json(args.out, report)
@@ -206,8 +323,24 @@ def main(argv=None) -> int:
         f"  added victim overhead {added_overhead*100:.2f}pp; "
         f"reference bit-for-bit: {ok_ref}"
     )
+    print(
+        f"  slo cell:    {slo['arrivals']} arrivals, "
+        f"{len(slo['classes'])} priority classes, sketch buffer "
+        f"{slo['sketch_buffer']}; alerts guard={slo['alerts']['guard']} "
+        f"tight={slo['alerts']['tight']}"
+    )
+    for cls in sorted(slo["classes"]):
+        e = slo["classes"][cls]
+        print(
+            f"    {cls}: n={e['count']} bound±{e['rank_error_bound']} ranks  "
+            + "  ".join(
+                f"{k}={e[k]['sketch']*1e3:.3f}/{e[k]['exact']*1e3:.3f}ms"
+                for k in ("p50", "p95", "p99")
+            )
+        )
     print(f"wrote {args.out}; acceptance: {report['acceptance']}")
-    return 0 if (ok_wait and ok_overflow and ok_victim and ok_ref) else 1
+    ok_slo = all(slo["acceptance"].values())
+    return 0 if (ok_wait and ok_overflow and ok_victim and ok_ref and ok_slo) else 1
 
 
 if __name__ == "__main__":

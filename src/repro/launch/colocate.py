@@ -36,7 +36,7 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core.planner import MemoryPlanner
 from repro.core.simulator import TPU_V5E
 from repro.models import build_model
-from repro.obs import add_obs_args, export_trace, recorder_for
+from repro.obs import add_obs_args, export_monitor, export_trace, recorder_for
 from repro.plan import PlanCache, PlanKey
 from repro.runtime import ColocationResult, colocate_programs
 
@@ -277,6 +277,7 @@ def main(argv=None):
                 f"{d['binding_constraint']}"
             )
     export_trace(args, recorder, result.report)
+    export_monitor(args, recorder)
     if args.verify:
         from repro.analyze import verify_launch
 

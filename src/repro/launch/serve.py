@@ -139,7 +139,7 @@ def main(argv=None):
             # solved programs the planner just produced/restored.
             from repro.core.simulator import TPU_V5E
             from repro.launch.colocate import print_colocation
-            from repro.obs import export_trace, recorder_for
+            from repro.obs import export_monitor, export_trace, recorder_for
             from repro.runtime import colocate_programs
 
             programs = {
@@ -158,6 +158,7 @@ def main(argv=None):
             )
             print_colocation(result)
             export_trace(args, recorder, result.report)
+            export_monitor(args, recorder)
             if args.verify:
                 from repro.analyze import verify_launch
 

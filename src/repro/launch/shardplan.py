@@ -40,7 +40,7 @@ from repro.dist import (
 )
 from repro.launch.steps import batch_specs, param_specs
 from repro.models import build_model
-from repro.obs import add_obs_args, export_trace, recorder_for
+from repro.obs import add_obs_args, export_monitor, export_trace, recorder_for
 from repro.plan import PlanCache, PlanKey
 
 
@@ -177,6 +177,7 @@ def main(argv=None) -> int:
                          obs=recorder, lane_split=args.lane_split, **kw)
     blind = run_mesh(solved, hw, contended=True, contention_aware=False, **kw)
     export_trace(args, recorder, contended.report)
+    export_monitor(args, recorder)
     if args.verify:
         from repro.analyze import verify_launch
 

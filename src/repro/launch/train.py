@@ -129,7 +129,7 @@ def main(argv=None):
             # runtime (contended shared link, the headline configuration)
             # and export the Perfetto trace before training proper starts.
             from repro.dist import run_mesh
-            from repro.obs import export_trace, recorder_for
+            from repro.obs import export_monitor, export_trace, recorder_for
 
             shard_peak = max(
                 p.require_trace().peak_load() for p in solved.programs.values()
@@ -153,6 +153,7 @@ def main(argv=None):
                 f"{mesh_run.mean_overhead()*100:.2f}%"
             )
             export_trace(args, recorder, mesh_run.report)
+            export_monitor(args, recorder)
             if args.verify:
                 from repro.analyze import verify_launch
 

@@ -40,8 +40,11 @@ class ObsRecorder:
         self.transfers: list[tuple] = []
         # (start, end) on the shared host link
         self.blackouts: list[tuple] = []
-        # (name, device, arrival_t, admit_t)
+        # (name, device, arrival_t, admit_t) — 4-wide on purpose: both
+        # trace_export and analyze.schedule_check unpack this shape.
         self.admissions: list[tuple] = []
+        # tenant name -> SLO priority as reported at admission
+        self.priorities: dict[str, float] = {}
         # (name, arrival_t)
         self.unschedulables: list[tuple] = []
         # (kind: staged|applied|cancelled, victim, t, value: new_limit|freed bytes|0)
@@ -88,8 +91,9 @@ class ObsRecorder:
         self.metrics.counter("link.blackout_s").inc(end - start)
 
     def admitted(self, name: str, device: "str | None",
-                 arrival_t: float, admit_t: float) -> None:
+                 arrival_t: float, admit_t: float, priority: float = 1.0) -> None:
         self.admissions.append((name, device, arrival_t, admit_t))
+        self.priorities[name] = priority
         self.metrics.counter("admission.admitted").inc()
         self.metrics.counter("admission.queue_wait_s").inc(admit_t - arrival_t)
 

@@ -44,6 +44,7 @@ PID_TENANTS = 1
 PID_DMA = 2
 PID_LINK = 3
 PID_MEM = 4
+PID_ALERTS = 5
 
 LEGEND = {
     "tracks": {
@@ -51,6 +52,8 @@ LEGEND = {
         "dma channels": "per-(device, channel) swap transfers: in:v<var> / out:v<var>",
         "host link": "per-lane transfers + merged collective 'blackout' row",
         "hbm": "counters: HBM [<device>] pool totals, resident [<tenant>]",
+        "alerts": "per-SLO rows of instant events from the streaming monitor "
+                  "(burn-rate and asymmetry crossings; args carry slo/kind/value)",
     },
     "stall_causes": {
         "swap_in_wait": "compute blocked on an in-flight (or late) swap-in",
@@ -239,12 +242,38 @@ def chrome_trace(recorder: ObsRecorder, report=None) -> dict:
             ev.append({"ph": "C", "pid": PID_MEM, "name": f"resident [{name}]",
                        "ts": t1 * _US, "args": {"bytes": resident}})
 
+    # ------------------------------------------------------- alerts (pid 5)
+    # Present only for monitored recorders (repro.obs.monitor); a plain
+    # ObsRecorder has no ``alerts`` and the track is simply absent.
+    alerts = getattr(recorder, "alerts", ())
+    slo_specs = getattr(recorder, "slo_specs", None)
+    if alerts:
+        proc(PID_ALERTS, "alerts")
+        slo_tids: dict[str, int] = {}
+        for a in alerts:
+            if a.slo not in slo_tids:
+                slo_tids[a.slo] = len(slo_tids) + 1
+                thread(PID_ALERTS, slo_tids[a.slo], a.slo)
+            ev.append({"ph": "i", "s": "p", "pid": PID_ALERTS,
+                       "tid": slo_tids[a.slo], "name": f"alert:{a.kind}",
+                       "ts": a.t * _US,
+                       "args": {"slo": a.slo, "kind": a.kind, "value": a.value,
+                                "threshold": a.threshold}})
+
     ev.sort(key=lambda e: (e["ts"], e.get("dur", 0.0)))
+    if hasattr(recorder, "finalize"):
+        recorder.finalize()  # idempotent: folds monitor gauges into metrics
     other = {
         "schema_version": TRACE_SCHEMA_VERSION,
         "legend": LEGEND,
         "metrics": recorder.metrics.snapshot(),
     }
+    if slo_specs is not None:
+        other["slos"] = [s.as_dict() for s in slo_specs]
+    monitor = getattr(recorder, "monitor", None)
+    if monitor is not None:
+        other["monitor"] = {"quantiles": monitor.quantile_summary(),
+                            "alerts": [a.as_dict() for a in alerts]}
     if report is not None:
         other["report"] = report if isinstance(report, dict) else report.as_dict()
     return {

@@ -1318,7 +1318,8 @@ class MemoryRuntime:
             heapq.heappush(self._event_heap, (run.t, run._admit_seq, run))
             if self.obs is not None:
                 self.obs.admitted(cand.name, cand.device,
-                                  cand.arrival_t, run.admit_t)
+                                  cand.arrival_t, run.admit_t,
+                                  getattr(cand, "priority", 1.0))
 
     def _drain_arrivals(self, upto: float) -> None:
         """Move arrivals with ``arrival_t <= upto`` into the admission queue,

@@ -13,8 +13,16 @@ each revision's numeric scalars into dotted paths, and emits one summary:
 plus a human-readable first->last delta table for every metric that moved.
 No third-party deps and no jax import — safe anywhere git is.
 
+``--diff REV_A REV_B`` switches to differential mode: every selected file
+is loaded at both revisions (``-`` means the working tree) and diffed with
+``repro.obs.diffing`` — per-cause ledger delta, quantile shift, and a
+ranked top-K regression attribution table, e.g.::
+
+  python tools/bench_history.py BENCH_engine.json --diff HEAD~2 -
+
 Usage:
   python tools/bench_history.py [FILES...] [--json OUT] [--depth N] [--match SUBSTR]
+                                [--diff REV_A REV_B] [--top N]
 """
 from __future__ import annotations
 
@@ -62,6 +70,13 @@ def history(relpath: str, depth: int) -> list[dict]:
         except (RuntimeError, ValueError):
             continue  # deleted or unparsable at this revision
         meta = payload.get("_meta", {}) if isinstance(payload, dict) else {}
+        if meta.get("schema_version") is None:
+            print(
+                f"warning: {relpath}@{sha[:12]} has no _meta stamp "
+                "(written before schema v1); treating its metrics as "
+                "schema-less — regenerate or re-stamp the file",
+                file=sys.stderr,
+            )
         entries.append(
             {
                 "sha": sha,
@@ -90,6 +105,34 @@ def delta_table(entries: list[dict], match: str | None) -> list[tuple]:
     return rows
 
 
+def run_diff(files: list, rev_a: str, rev_b: str, top: int,
+             match: "str | None") -> int:
+    """Differential mode: repro.obs.diffing over two revisions per file."""
+    try:
+        from repro.obs.diffing import diff_runs, format_diff, load_run
+    except ImportError:  # invoked without PYTHONPATH=src
+        sys.path.insert(0, os.path.join(REPO, "src"))
+        from repro.obs.diffing import diff_runs, format_diff, load_run
+
+    status = 0
+    for rel in files:
+        spec_a = os.path.join(REPO, rel) if rev_a == "-" else f"{rel}@{rev_a}"
+        spec_b = os.path.join(REPO, rel) if rev_b == "-" else f"{rel}@{rev_b}"
+        try:
+            view_a = load_run(spec_a, repo=REPO)
+            view_b = load_run(spec_b, repo=REPO)
+        except (OSError, ValueError) as e:
+            print(f"skip {rel}: {e}", file=sys.stderr)
+            status = 1
+            continue
+        if match:
+            view_a.scalars = {k: v for k, v in view_a.scalars.items() if match in k}
+            view_b.scalars = {k: v for k, v in view_b.scalars.items() if match in k}
+        print(format_diff(diff_runs(view_a, view_b, top_k=top)))
+        print()
+    return status
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("files", nargs="*",
@@ -99,6 +142,11 @@ def main(argv=None) -> int:
                     help="flattening depth for nested metrics")
     ap.add_argument("--match", default=None,
                     help="only print metrics whose path contains this substring")
+    ap.add_argument("--diff", nargs=2, default=None, metavar=("REV_A", "REV_B"),
+                    help="diff each file between two git revisions "
+                         "('-' = working tree) via repro.obs.diffing")
+    ap.add_argument("--top", type=int, default=12,
+                    help="rows in the --diff regression table")
     args = ap.parse_args(argv)
 
     files = args.files or sorted(
@@ -107,6 +155,9 @@ def main(argv=None) -> int:
     if not files:
         print("no BENCH_*.json found", file=sys.stderr)
         return 1
+
+    if args.diff:
+        return run_diff(files, args.diff[0], args.diff[1], args.top, args.match)
 
     summary = {}
     for rel in files:

@@ -1,0 +1,72 @@
+"""CI gate for the streaming SLO monitor (Issue 10).
+
+Runs the ``benchmarks.bench_churn`` SLO-percentile cell in smoke mode
+in-process and fails the build unless the streaming telemetry holds:
+
+  * **purity** — the simulated report with the monitor armed is
+    bit-identical to the unmonitored run (the monitor is a pure observer);
+  * **sketch accuracy** — per-priority-class p50/p95/p99 queue waits from
+    the streaming quantile sketch match the exact post-hoc percentiles
+    within the sketch's self-reported rank-error bound;
+  * **alert track** — the generous guard SLO emits zero alerts (no false
+    alarms), the deliberately tight SLO does fire (the detector works),
+    and the alert stream is ts-sorted.
+
+The engine and the monitor are deterministic, so these are exact
+comparisons — no tolerance, no retry.
+
+    PYTHONPATH=src python -m tools.check_slo
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main(argv=None) -> int:
+    from benchmarks.bench_churn import slo_cell
+
+    cell = slo_cell(smoke=True, seed=42)
+    acc = cell["acceptance"]
+    failures = []
+    if not acc["monitor_pure"]:
+        failures.append("monitor armed changed the simulated report")
+    if not acc["sketch_within_bounds"]:
+        bad = [
+            f"{cls}.{q}"
+            for cls, e in sorted(cell["classes"].items())
+            for q in ("p50", "p95", "p99")
+            if not e[q]["within_bound"]
+        ]
+        failures.append(f"sketch quantiles outside rank-error bound: {bad}")
+    if not acc["zero_false_alarms"]:
+        failures.append(
+            f"guard SLO raised {cell['alerts']['guard']} false alarm(s)")
+    if not acc["tight_slo_fires"]:
+        failures.append("tight SLO never fired on an overloaded storm")
+    if not acc["alerts_ts_sorted"]:
+        failures.append("alert stream is not ts-sorted")
+
+    for cls in sorted(cell["classes"]):
+        e = cell["classes"][cls]
+        print(
+            f"ok {cls}: n={e['count']} bound±{e['rank_error_bound']} ranks  "
+            + "  ".join(
+                f"{q}={e[q]['sketch']*1e3:.3f}/{e[q]['exact']*1e3:.3f}ms"
+                for q in ("p50", "p95", "p99")
+            )
+        )
+    print(
+        f"ok alerts: guard={cell['alerts']['guard']} "
+        f"tight={cell['alerts']['tight']} ts_sorted={cell['alerts']['ts_sorted']}; "
+        f"monitor pure: {acc['monitor_pure']}"
+    )
+
+    if failures:
+        print("\n".join("FAIL " + f for f in failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,10 @@ Checks, per file:
   4. The embedded report's stall-attribution ledgers sum to the reported
      overhead: for every completed tenant, the cause buckets (everything
      except the informational keys) add up to ``overhead_s``.
+  5. The alerts track (pid 5, present only for monitored runs) is
+     well-formed: every alert is an instant event with numeric value/
+     threshold args, the track is ts-sorted, and every alert names an SLO
+     registered in ``otherData.slos``.
 
 With ``--invariants``, each trace is additionally swept by the event-log
 race detector (``repro.analyze.schedule_check``): channel/lane transfer
@@ -36,6 +40,7 @@ KNOWN_PHASES = {"X", "B", "E", "i", "I", "C", "M", "s", "t", "f"}
 # Attribution keys outside the sums-to-overhead invariant: the total itself,
 # admission queueing (precedes the overhead window) and host wall-clock.
 LEDGER_INFORMATIONAL = {"overhead_s", "queue_wait_s", "renegotiation_solve_s"}
+PID_ALERTS = 5
 
 
 def _tol(x: float) -> float:
@@ -124,7 +129,37 @@ def check_trace(path: str) -> list[str]:
         if fid not in flow_starts:
             errors.append(f"{where}: flow finish id {fid!r} without a start")
 
-    # --- 4. attribution ledgers in the embedded report
+    # --- 4. alerts track: instant events only, ts-sorted, every alert
+    # names a registered SLO (vacuous for traces without a monitor).
+    registered = {s.get("name") for s in other.get("slos", [])
+                  if isinstance(s, dict)}
+    prev_ts = None
+    for k, e in enumerate(events):
+        if e.get("pid") != PID_ALERTS or e.get("ph") == "M":
+            continue
+        where = f"{path}: traceEvents[{k}]"
+        if e.get("ph") != "i":
+            errors.append(f"{where}: alerts track carries non-instant "
+                          f"phase {e.get('ph')!r}")
+            continue
+        args = e.get("args")
+        if not isinstance(args, dict) or not isinstance(
+                args.get("value"), (int, float)) or not isinstance(
+                args.get("threshold"), (int, float)):
+            errors.append(f"{where}: alert without numeric value/threshold args")
+            continue
+        slo = args.get("slo")
+        if slo not in registered:
+            errors.append(f"{where}: alert names unregistered SLO {slo!r} "
+                          f"(registered: {sorted(registered)})")
+        ts = e.get("ts")
+        if prev_ts is not None and isinstance(ts, (int, float)) and ts < prev_ts:
+            errors.append(f"{where}: alerts track not ts-sorted "
+                          f"({ts} after {prev_ts})")
+        if isinstance(ts, (int, float)):
+            prev_ts = ts
+
+    # --- 5. attribution ledgers in the embedded report
     report = other.get("report")
     if isinstance(report, dict):
         checked = 0

@@ -53,6 +53,14 @@ echo "== churn smoke benchmark: renegotiation vs FIFO queueing =="
 python -m benchmarks.bench_churn --smoke --out "${TMPDIR:-/tmp}/BENCH_churn_smoke.json" \
   || { echo "FAIL churn bench"; status=1; }
 
+echo "== slo smoke gate: streaming sketch accuracy + clean alert track =="
+# Re-runs the bench_churn SLO cell in smoke mode and fails unless the
+# monitored report is bit-identical to the unmonitored one, per-class
+# p50/p95/p99 queue waits from the streaming sketch match exact post-hoc
+# percentiles within the sketch's rank-error bound, the guard SLO raises
+# zero false alarms, and the tight SLO does fire.
+python -m tools.check_slo || { echo "FAIL slo gate"; status=1; }
+
 echo "== tune smoke gate: ledger victim policy + SLO-equalized splits =="
 # Re-runs the bench_tune smoke cells in-process and fails unless the ledger
 # victim policy's mean newcomer wait is equal-or-lower than floor-greedy's

@@ -45,6 +45,12 @@ DEFAULT_FILES = [
     "src/repro/core/smartpool.py",
     "src/repro/core/autoswap.py",
     "src/repro/tune/victim.py",
+    # Streaming-monitor modules: sketch compaction/merge order and alert
+    # emission land in the recorder stream that repro.analyze.schedule_check
+    # consumes, so they must be exactly as deterministic as the engine.
+    "src/repro/obs/sketch.py",
+    "src/repro/obs/windows.py",
+    "src/repro/obs/monitor.py",
 ]
 
 SET_BUILTINS = {"set", "frozenset"}
